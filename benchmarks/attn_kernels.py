@@ -1,0 +1,72 @@
+"""Paper Fig. 5 analogue (element-wise pipeline time savings): end-to-end
+attention with each normalizer. Two measurements:
+
+* XLA cost of the blockwise attention (train shape): consmax's KV scan
+  carries only the accumulator, softmax carries (acc, m, l) + rescales — the
+  flop/transcendental delta is the software mirror of the pipeline stall the
+  paper removes;
+* CPU wall time of the jitted decode row at a 4k context (the generation
+  stage the paper highlights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from benchmarks.common import bench_wall, emit
+from repro.configs.base import ConSmaxConfig
+from repro.core import attention as A
+from repro.core.consmax import consmax_init
+from repro.nn.module import Ctx
+
+
+def run(out_dir: str = "artifacts/bench"):
+    key = random.key(0)
+    b, s, nh, nkv, d = 2, 1024, 8, 8, 64
+    q = random.normal(random.fold_in(key, 1), (b, s, nh, d), jnp.float32)
+    k = random.normal(random.fold_in(key, 2), (b, s, nkv, d), jnp.float32)
+    v = random.normal(random.fold_in(key, 3), (b, s, nkv, d), jnp.float32)
+    params = consmax_init(Ctx(random.key(0)), "n", nh, ConSmaxConfig())
+
+    rows = []
+    base_us = None
+    for norm in ("softmax", "softermax", "consmax"):
+        fn = jax.jit(lambda q, k, v, n=norm: A.blockwise_attention(
+            q, k, v, norm_kind=n, norm_params=params, q_chunk=256,
+            kv_chunk=256))
+        c = fn.lower(q, k, v).compile().cost_analysis()
+        us = bench_wall(fn, q, k, v, iters=3)
+        rows.append((f"attn/train_{norm}_us", f"{us:.0f}",
+                     f"flops={float(c.get('flops',0)):.3e};"
+                     f"trans={float(c.get('transcendentals',0)):.3e}"))
+        if norm == "softmax":
+            base_us = us
+        if norm == "consmax" and base_us:
+            rows.append(("attn/train_consmax_speedup",
+                         f"{base_us/us:.3f}x", "vs_softmax_cpu_wall"))
+
+    # decode row at 4k context
+    L = 4096
+    kL = random.normal(random.fold_in(key, 4), (b, L, nkv, d), jnp.float32)
+    vL = random.normal(random.fold_in(key, 5), (b, L, nkv, d), jnp.float32)
+    q1 = q[:, :1]
+    idx = jnp.full((b,), L - 1, jnp.int32)
+    base_us = None
+    for norm in ("softmax", "consmax"):
+        fn = jax.jit(lambda q1, kL, vL, idx, n=norm: A.decode_attention(
+            q1, kL, vL, idx, norm_kind=n, norm_params=params,
+            merged=n == "consmax"))
+        us = bench_wall(fn, q1, kL, vL, idx, iters=5)
+        rows.append((f"attn/decode4k_{norm}_us", f"{us:.0f}", "one_token"))
+        if norm == "softmax":
+            base_us = us
+        else:
+            rows.append(("attn/decode4k_consmax_speedup",
+                         f"{base_us/us:.3f}x", "vs_softmax_cpu_wall"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

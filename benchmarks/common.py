@@ -1,0 +1,57 @@
+"""Shared benchmark utilities: timing, CSV emission, tiny-GPT trainer."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.train.trainer import Trainer
+
+
+def bench_wall(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def tiny_gpt(score_norm: str, *, steps: int, seed: int = 7,
+             seq_len: int = 128, d_model: int = 128, n_layers: int = 2,
+             vocab: int = 512, lr: float = 1e-3, track_params=None,
+             beta_init=None, gamma_init=None):
+    """Reduced paper-config GPT trainer; returns (losses, tracked)."""
+    cfg = get_config("gpt2-consmax", score_norm=score_norm,
+                     vocab_size=vocab, n_layers=n_layers, d_model=d_model,
+                     n_heads=4, n_kv_heads=4, d_ff=4 * d_model)
+    if beta_init is not None:
+        cfg = cfg.replace(consmax=cfg.consmax.__class__(
+            beta_init_lo=beta_init, beta_init_hi=beta_init,
+            gamma_init=gamma_init if gamma_init is not None else 100.0))
+    elif gamma_init is not None:
+        cfg = cfg.replace(consmax=cfg.consmax.__class__(
+            gamma_init=gamma_init))
+    tcfg = TrainConfig(global_batch=8, seq_len=seq_len, lr=lr,
+                       warmup_steps=10, total_steps=steps, remat="none",
+                       seed=seed)
+    tr = Trainer(cfg, tcfg, log_every=10**9)
+    tracked = []
+    losses = []
+    for _ in range(steps):
+        h = tr.run(1)
+        losses.append(h[-1]["loss"])
+        if track_params is not None:
+            tracked.append(track_params(tr.state["params"]))
+    return losses, tracked
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,32 @@
+"""Paper Fig. 8 analogue: beta x gamma initialization sweep — short warmup
+runs, pick the combination with the lowest loss (the paper then trains that
+one to convergence)."""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, tiny_gpt
+
+
+def run(steps: int = 25, out_dir: str = "artifacts/bench"):
+    os.makedirs(out_dir, exist_ok=True)
+    grid = {}
+    for beta0 in (0.5, 1.5, 2.5):
+        for gamma0 in (50.0, 100.0, 200.0):
+            losses, _ = tiny_gpt("consmax", steps=steps, beta_init=beta0,
+                                 gamma_init=gamma0)
+            grid[f"beta={beta0},gamma={gamma0}"] = float(np.mean(losses[-5:]))
+    with open(os.path.join(out_dir, "fig8_init_sweep.json"), "w") as f:
+        json.dump(grid, f, indent=1)
+    best = min(grid, key=grid.get)
+    rows = [(f"fig8/{k}", f"{v:.4f}", "warmup_loss") for k, v in grid.items()]
+    rows.append(("fig8/best_combo", best, f"loss={grid[best]:.4f}"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

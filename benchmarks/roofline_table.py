@@ -1,0 +1,71 @@
+"""Render the §Roofline table from dry-run artifacts (artifacts/dryrun/*.json).
+One row per (arch x shape x mesh): three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, HBM fit verdict."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir: str = "artifacts/dryrun", tag: str | None = None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            r = json.load(fh)
+        rtag = r.get("tag", "")
+        if (tag or "") != rtag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skip | — | — | {r['reason'][:60]} |")
+    if r["status"] != "ok":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — | {r.get('error','')[:60]} |")
+    ro = r["roofline"]
+    fit = "yes" if r["hbm"]["fits_16GiB"] else "NO"
+    return ("| {arch} | {shape} | {mesh} | {c:.2e} | {m:.2e} | {k:.2e} | "
+            "{dom} | {ratio:.3f} | {frac:.3f} | fits={fit} ({gb:.1f} GiB) |"
+            .format(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                    c=ro["compute_sec"], m=ro["memory_sec"],
+                    k=ro["collective_sec"], dom=ro["dominant"],
+                    ratio=ro["useful_flops_ratio"],
+                    frac=ro["roofline_fraction"], fit=fit,
+                    gb=r["hbm"]["peak_bytes_per_device"] / 2**30))
+
+
+HEADER = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "dominant | useful_flops | roofline_frac | HBM |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def run(out_dir: str = "artifacts/dryrun", tag: str | None = None):
+    recs = load(out_dir, tag)
+    print(HEADER)
+    for r in recs:
+        print(fmt_row(r))
+    rows = []
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_sec"]
+                   / max(r["roofline"]["bound_sec"], 1e-30))
+        rows.append(("roofline/cells_ok", str(len(ok)),
+                     f"skipped={sum(r['status']=='skipped' for r in recs)}"))
+        rows.append(("roofline/worst_fraction",
+                     f"{worst['roofline']['roofline_fraction']:.3f}",
+                     f"{worst['arch']}x{worst['shape']}x{worst['mesh']}"))
+        rows.append(("roofline/most_collective_bound",
+                     f"{coll['roofline']['collective_sec']:.2e}",
+                     f"{coll['arch']}x{coll['shape']}x{coll['mesh']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(run())

@@ -1,0 +1,54 @@
+"""Fault-tolerance demo: train, hard-stop mid-run (simulated preemption),
+restart from the checkpoint, and verify the loss trajectory continues — the
+data pipeline regenerates step N's batch deterministically so no progress or
+data is lost.
+
+    PYTHONPATH=src python examples/elastic_restart.py
+"""
+import os
+import shutil
+
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.train.trainer import Trainer
+
+CKPT = "artifacts/examples/elastic-ckpt"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_config("gpt2-consmax", vocab_size=512, n_layers=2, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=256)
+    tcfg = TrainConfig(global_batch=8, seq_len=64, lr=1e-3, warmup_steps=5,
+                       total_steps=120, remat="none")
+
+    # ---- run A: train 60 steps, checkpointing every 20 ----
+    tr = Trainer(cfg, tcfg, ckpt_dir=CKPT, ckpt_every=20, log_every=20)
+    hist_a = tr.run(60)
+    tr.ckpt.wait()
+    print(f"[A] stopped at step {tr.step_index()} "
+          f"(checkpoints: {tr.ckpt.steps()})")
+
+    # ---- simulated preemption: process dies; a NEW trainer resumes ----
+    tr2 = Trainer(cfg, tcfg, ckpt_dir=CKPT, ckpt_every=20, log_every=20)
+    assert tr2.step_index() == 60, tr2.step_index()
+    hist_b = tr2.run(40)
+    print(f"[B] resumed at 60, now at {tr2.step_index()}")
+
+    # ---- reference: uninterrupted run to the same step ----
+    shutil.rmtree(CKPT, ignore_errors=True)
+    tr3 = Trainer(cfg, tcfg, log_every=10**9)
+    hist_c = tr3.run(100)
+
+    resumed = hist_b[-1]["loss"]
+    straight = hist_c[-1]["loss"]
+    print(f"resumed-run loss @100:      {resumed:.4f}")
+    print(f"uninterrupted loss @100:    {straight:.4f}")
+    assert abs(resumed - straight) / straight < 0.05, "trajectory diverged"
+    print("OK: restart is trajectory-preserving (deterministic data + state)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Checkpointing: sharded-state save/restore with elastic resharding.
+
+Format: one ``state-<step>.npz`` of full arrays + a msgpack manifest with
+path/shape/dtype records. Restore is **elastic**: arrays are loaded and
+``jax.device_put`` with whatever sharding the *current* mesh prescribes, so a
+checkpoint written on a (16,16) mesh restores cleanly on (2,16,16) or a
+single CPU device (and vice versa). Saving can run on a background thread
+(jax arrays are immutable — snapshotting is safe); ``wait()`` joins before
+exit/preemption.
+
+On a real multi-host fleet each host would write its addressable shards to
+per-host files; this container is single-process so files hold full arrays —
+the manifest layout and restore path are host-count agnostic.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat):
+    tree: dict = {}
+    for path, v in flat.items():
+        node = tree
+        parts = path.split("/")
+        for p_ in parts[:-1]:
+            node = node.setdefault(p_, {})
+        node[parts[-1]] = v
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------- save ----
+    def save(self, state, step: int, *, blocking: bool = True):
+        flat = _flatten(state)
+        # device_get snapshot (immutable arrays -> safe to ship to a thread)
+        arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def write():
+            tmp = os.path.join(self.dir, f".tmp-{step}")
+            np.savez(tmp + ".npz", **{k.replace("/", "|"): v
+                                      for k, v in arrays.items()})
+            manifest = {
+                "step": step,
+                "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                           for k, v in arrays.items()},
+            }
+            with open(tmp + ".manifest", "wb") as f:
+                f.write(msgpack.packb(manifest))
+            os.replace(tmp + ".npz", self._path(step) + ".npz")
+            os.replace(tmp + ".manifest", self._path(step) + ".manifest")
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"state-{step:08d}")
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            for ext in (".npz", ".manifest"):
+                try:
+                    os.remove(self._path(s) + ext)
+                except FileNotFoundError:
+                    pass
+
+    # ---------------------------------------------------------- restore ----
+    def steps(self):
+        out = []
+        for f in os.listdir(self.dir):
+            m = re.match(r"state-(\d+)\.npz$", f)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self):
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, *, shardings=None, abstract=None):
+        """shardings: optional tree of NamedSharding matching the state tree —
+        arrays are placed with it (elastic reshard). abstract: optional tree
+        to validate shapes/dtypes against."""
+        with np.load(self._path(step) + ".npz") as z:
+            flat = {k.replace("|", "/"): z[k] for k in z.files}
+        state = _unflatten(flat)
+        if abstract is not None:
+            ref = _flatten(abstract)
+            for k, v in _flatten(state).items():
+                assert tuple(ref[k].shape) == tuple(v.shape), (
+                    k, ref[k].shape, v.shape)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            state = _unflatten({
+                k: jax.device_put(v, flat_s[k])
+                for k, v in _flatten(state).items()})
+        else:
+            state = jax.tree.map(jax.numpy.asarray, state)
+        return state

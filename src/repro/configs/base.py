@@ -1,0 +1,159 @@
+"""Model/run configuration dataclasses + arch registry.
+
+Every assigned architecture provides ``full()`` (exact published config) and
+``smoke()`` (reduced same-family config for CPU tests) via
+``repro.configs.registry``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ConSmaxConfig:
+    """Learnable-normalizer config (the paper's contribution)."""
+    beta_init_lo: float = 0.5        # paper: beta ~ U[0.5, 2.5]
+    beta_init_hi: float = 2.5
+    gamma_init: float = 100.0        # paper: gamma = 100
+    per_head: bool = True
+    learnable: bool = True
+    # inference-time merged constant C = e^{-beta}/gamma (paper Eq.3, sign fixed)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    d_ff_expert: int = 0             # expert hidden size
+    capacity_factor: float = 1.25
+    layer_period: int = 1            # MoE every k-th layer (jamba: 2)
+    aux_loss_weight: float = 0.01
+    router_norm: str = "softmax"     # "softmax" | "consmax" (extension)
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0                 # 0 -> ceil(d_model/16)
+    chunk: int = 256                 # chunkwise scan length (memory control)
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    proj_factor: float = 2.0
+    d_conv: int = 4
+    slstm_every: int = 8             # xLSTM[7:1]: 1 sLSTM per 8 blocks
+    chunk: int = 256
+    stabilizer: str = "max"          # "max" (faithful) | "consmax" (extension)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense|moe|vlm|ssm|audio|hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- attention flavour ---
+    score_norm: str = "consmax"      # "softmax" | "consmax" | "softermax"
+    consmax: ConSmaxConfig = field(default_factory=ConSmaxConfig)
+    qkv_bias: bool = False
+    rope_style: str = "half"         # "half" | "interleaved" (glm 2d) | "none"
+    rope_fraction: float = 1.0       # chatglm: 0.5
+    rope_theta: float = 10000.0
+    attn_softcap: float = 0.0        # gemma2: 50.0 ; grok: 30.0 ; 0 = off
+    final_softcap: float = 0.0       # gemma2: 30.0
+    window: int = 0                  # sliding-window size for "local" layers
+    block_pattern: tuple = ("attn",) # repeating layer pattern, e.g.
+                                     # ("local","global") or 7*("mamba",)+("attn",)
+    cross_attn: bool = False         # musicgen: cross-attend to conditioning
+    n_cond_tokens: int = 0
+    sinusoidal_pos: bool = False     # musicgen/gpt2: additive abs positions
+    # --- mlp flavour ---
+    mlp: str = "silu_glu"            # "silu_glu" | "gelu_glu" | "gelu"
+    norm: str = "rmsnorm"            # "rmsnorm" | "layernorm"
+    post_block_norm: bool = False    # gemma2 sandwich norms
+    embed_scale: bool = False        # gemma2: scale embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    # --- frontends (stubs per assignment) ---
+    frontend: str = "tokens"         # "tokens" | "patches" (vlm) | "frames" (audio)
+    # --- mixture / ssm ---
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    # --- dtypes ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.block_pattern)
+
+    @property
+    def n_super_layers(self) -> int:
+        assert self.n_layers % self.pattern_period == 0, (
+            self.arch_id, self.n_layers, self.block_pattern)
+        return self.n_layers // self.pattern_period
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch: int = 256
+    seq_len: int = 4096
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    b1: float = 0.9
+    b2: float = 0.95
+    remat: str = "full"              # "none" | "full" | "dots"
+    microbatch: int = 0              # 0 = no gradient accumulation
+    fsdp: bool = True                # shard params/opt over data axis
+    grad_compression: str = "none"   # "none" | "int8_ef" (error feedback)
+    q_chunk: int = 2048              # blockwise-attention tile sizes
+    kv_chunk: int = 1024
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int = 128
+    max_seq: int = 32_768
+    prefill_chunk: int = 2048
+    kv_cache_dtype: str = "bfloat16"
+    seq_shard_kv: bool = False       # shard KV cache along sequence (500k cells)
+    q_chunk: int = 2048              # prefill blockwise-attention tiles
+    kv_chunk: int = 1024
+
+
+SHAPES = {
+    # name: (seq_len, global_batch, kind)
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}

@@ -1,0 +1,5 @@
+"""Architecture config: gemma2-2b (see registry docstring for sources)."""
+from repro.configs.base import (ConSmaxConfig, MambaConfig, ModelConfig,
+                                MoEConfig, XLSTMConfig)
+
+CONFIG = ModelConfig(arch_id='gemma2-2b', family='dense', n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_ff=9216, vocab_size=256000, head_dim=256, score_norm='consmax', consmax=ConSmaxConfig(beta_init_lo=0.5, beta_init_hi=2.5, gamma_init=100.0, per_head=True, learnable=True), qkv_bias=False, rope_style='half', rope_fraction=1.0, rope_theta=10000.0, attn_softcap=50.0, final_softcap=30.0, window=4096, block_pattern=('local', 'global'), cross_attn=False, n_cond_tokens=0, sinusoidal_pos=False, mlp='gelu_glu', norm='rmsnorm', post_block_norm=True, embed_scale=True, tie_embeddings=True, frontend='tokens', moe=None, mamba=None, xlstm=None, param_dtype='float32', compute_dtype='bfloat16')

@@ -1,0 +1,5 @@
+"""Architecture config: phi-3-vision-4.2b (see registry docstring for sources)."""
+from repro.configs.base import (ConSmaxConfig, MambaConfig, ModelConfig,
+                                MoEConfig, XLSTMConfig)
+
+CONFIG = ModelConfig(arch_id='phi-3-vision-4.2b', family='vlm', n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, d_ff=8192, vocab_size=32064, head_dim=0, score_norm='consmax', consmax=ConSmaxConfig(beta_init_lo=0.5, beta_init_hi=2.5, gamma_init=100.0, per_head=True, learnable=True), qkv_bias=False, rope_style='half', rope_fraction=1.0, rope_theta=10000.0, attn_softcap=0.0, final_softcap=0.0, window=0, block_pattern=('attn',), cross_attn=False, n_cond_tokens=0, sinusoidal_pos=False, mlp='silu_glu', norm='rmsnorm', post_block_norm=False, embed_scale=False, tie_embeddings=True, frontend='patches', moe=None, mamba=None, xlstm=None, param_dtype='float32', compute_dtype='bfloat16')

@@ -1,0 +1,5 @@
+"""Architecture config: qwen2-1.5b (see registry docstring for sources)."""
+from repro.configs.base import (ConSmaxConfig, MambaConfig, ModelConfig,
+                                MoEConfig, XLSTMConfig)
+
+CONFIG = ModelConfig(arch_id='qwen2-1.5b', family='dense', n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2, d_ff=8960, vocab_size=151936, head_dim=0, score_norm='consmax', consmax=ConSmaxConfig(beta_init_lo=0.5, beta_init_hi=2.5, gamma_init=100.0, per_head=True, learnable=True), qkv_bias=True, rope_style='half', rope_fraction=1.0, rope_theta=10000.0, attn_softcap=0.0, final_softcap=0.0, window=0, block_pattern=('attn',), cross_attn=False, n_cond_tokens=0, sinusoidal_pos=False, mlp='silu_glu', norm='rmsnorm', post_block_norm=False, embed_scale=False, tie_embeddings=True, frontend='tokens', moe=None, mamba=None, xlstm=None, param_dtype='float32', compute_dtype='bfloat16')

@@ -1,0 +1,283 @@
+"""Attention with pluggable score normalizer (softmax / softermax / consmax).
+
+Two execution paths:
+
+* ``blockwise_attention`` — training/prefill. Static outer loop over query
+  chunks; inner ``lax.scan`` over KV chunks bounded by the causal/window
+  structure (no wasted upper-triangle FLOPs). For softmax/softermax the scan
+  carries the online (m, l, acc) state — the synchronization the paper
+  removes. For **consmax the carry is the output accumulator alone**: each KV
+  chunk contributes ``(exp(s-beta)/gamma) @ v`` independently, which is the
+  paper's sync-free property expressed at the JAX level (the Pallas kernel in
+  ``kernels/consmax_attn`` is the TPU-tiled version of exactly this loop).
+
+* ``decode_attention`` — single-token decode against a KV cache. Scores for
+  one query row are small even at 512k context, so the row is materialized;
+  with a sequence-sharded cache, softmax requires global max+sum collectives
+  while consmax needs only the output psum (visible in the dry-run HLO).
+
+Supports GQA (grouped KV heads without materializing repeated K/V), partial /
+interleaved RoPE, sliding-window ("local") layers, attn-logit softcapping,
+and cross-attention.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import normalizers
+from repro.distributed.sharding import shard
+from repro.nn import layers as L
+from repro.nn import rope as R
+
+NEG_INF = normalizers.NEG_INF
+
+
+# ------------------------------------------------------------------ init ----
+def attention_init(ctx, name: str, cfg: ModelConfig, *, cross: bool = False):
+    d, H, hkv, dk = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    pdt = cfg.pdtype()
+    with ctx.scope(name):
+        p = {
+            "q": L.heads_proj_init(ctx, "q", d, H, dk, bias=cfg.qkv_bias,
+                                   dtype=pdt, head_axis="heads"),
+            "k": L.heads_proj_init(ctx, "k", d, hkv, dk, bias=cfg.qkv_bias,
+                                   dtype=pdt, head_axis="kv_heads"),
+            "v": L.heads_proj_init(ctx, "v", d, hkv, dk, bias=cfg.qkv_bias,
+                                   dtype=pdt, head_axis="kv_heads"),
+            "o": L.heads_out_init(ctx, "o", H, dk, d, dtype=pdt,
+                                  head_axis="heads"),
+            "score_norm": normalizers.norm_init(
+                ctx, "score_norm", cfg.score_norm, H, cfg.consmax),
+        }
+    return p
+
+
+# ------------------------------------------------------------- masks ----
+def _chunk_mask(qpos, kpos, *, causal, window, kv_len):
+    """qpos: (q,) kpos: (c,) -> bool (q, c)."""
+    m = jnp.broadcast_to(kpos[None, :] < kv_len,
+                         (qpos.shape[0], kpos.shape[0]))
+    if causal:
+        m &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+# ------------------------------------------------- blockwise attention ----
+def blockwise_attention(q, k, v, *, norm_kind: str, norm_params,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, merged: bool = False,
+                        q_chunk: int = 2048, kv_chunk: int = 1024,
+                        q_offset: int = 0):
+    """q: (b, sq, H, dk); k, v: (b, skv, hkv, dk). Returns (b, sq, H, dk).
+
+    Chunk scores are computed in fp32; the accumulator is fp32.
+    """
+    b, sq, H, dk = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, skv)
+
+    # pad KV to a chunk multiple once; padded keys masked via kv_len.
+    n_kv = -(-skv // kc)
+    pad = n_kv * kc - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, sq, hkv, g, dk)
+    cdt = q.dtype
+
+    def q_chunk_body(q_blk, i0, n_lo, n_hi):
+        """q_blk: (b, qc_i, hkv, g, dk); scan KV chunks [n_lo, n_hi)."""
+        qc_i = q_blk.shape[1]
+        qpos = i0 + jnp.arange(qc_i)
+
+        def kv_step(carry, j):
+            k_blk = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+            s = jnp.einsum("bqhgd,bchd->bhgqc", q_blk, k_blk,
+                           preferred_element_type=jnp.float32)
+            if softcap > 0:
+                s = softcap * jnp.tanh(s / softcap)
+            kpos = j * kc + jnp.arange(kc)
+            msk = _chunk_mask(qpos, kpos, causal=causal, window=window,
+                              kv_len=skv)[None, None, None]  # (1,1,1,q,c)
+            if norm_kind == "consmax":
+                acc = carry
+                ps = normalizers.apply_norm(
+                    "consmax", norm_params,
+                    s.reshape(b, H, qc_i, kc), msk.reshape(1, 1, qc_i, kc),
+                    head_axis=1, merged=merged).reshape(b, hkv, g, qc_i, kc)
+                acc = acc + jnp.einsum("bhgqc,bchd->bqhgd",
+                                       ps.astype(cdt), v_blk,
+                                       preferred_element_type=jnp.float32)
+                return acc, None
+            # online softmax / softermax (base e / base 2)
+            acc, m, l = carry
+            base2 = norm_kind == "softermax"
+            s = jnp.where(msk, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            expf = jnp.exp2 if base2 else jnp.exp
+            alpha = expf(m - m_new)                       # rescale factor
+            e = expf(s - m_new[..., None])
+            e = jnp.where(msk, e, 0.0)
+            l = l * alpha + jnp.sum(e, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqc,bchd->bhgqd", e.astype(cdt), v_blk,
+                preferred_element_type=jnp.float32)
+            return (acc, m_new, l), None
+
+        js = jnp.arange(n_lo, n_hi)
+        if norm_kind == "consmax":
+            acc0 = jnp.zeros((b, qc_i, hkv, g, dk), jnp.float32)
+            acc, _ = jax.lax.scan(kv_step, acc0, js)
+            return acc.astype(cdt)
+        acc0 = jnp.zeros((b, hkv, g, qc_i, dk), jnp.float32)
+        m0 = jnp.full((b, hkv, g, qc_i), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc_i), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), js)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return jnp.transpose(out, (0, 3, 1, 2, 4)).astype(cdt)  # b q h g d
+
+    outs = []
+    n_q = -(-sq // qc)
+    for i in range(n_q):
+        i0, i1 = i * qc, min((i + 1) * qc, sq)
+        # static causal/window bounds on KV chunks
+        hi = n_kv if not causal else min(n_kv, -(-(q_offset + i1) // kc))
+        lo = 0
+        if window > 0:
+            lo = max(0, (q_offset + i0 - window) // kc)
+        body = jax.checkpoint(
+            partial(q_chunk_body, i0=q_offset + i0, n_lo=lo, n_hi=max(hi, lo + 1)))
+        outs.append(body(qg[:, i0:i1]))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return out.reshape(b, sq, H, dk)
+
+
+# ---------------------------------------------------- decode attention ----
+def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
+                     softcap=0.0, merged=True):
+    """q: (b, 1, H, dk); k, v: (b, L, hkv, dk); index: (b,) current position.
+
+    Materializes the single score row (cheap even at 512k). With consmax the
+    kv reduction is a plain weighted sum — partial sums across a sharded L
+    axis combine with one psum and no (m, l) exchange.
+    """
+    b, _, H, dk = q.shape
+    L_, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    qg = q.reshape(b, hkv, g, dk)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(L_)
+    msk = kpos[None, :] <= index[:, None]                   # (b, L)
+    if window > 0:
+        msk &= (index[:, None] - kpos[None, :]) < window
+    s = s.reshape(b, H, 1, L_)
+    msk = msk[:, None, None, :]
+    p = normalizers.apply_norm(norm_kind, norm_params, s, msk,
+                               head_axis=1, merged=merged)
+    p = p.reshape(b, hkv, g, L_).astype(q.dtype)
+    out = jnp.einsum("bhgc,bchd->bhgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, H, dk).astype(q.dtype)
+
+
+# ----------------------------------------------------------- module api ----
+def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
+                    positions=None, cache=None, cond=None, merged=False,
+                    q_chunk: int = 2048, kv_chunk: int = 1024):
+    """Self- or cross-attention over x: (b, s, d).
+
+    cache: None (train/prefill) or dict(k, v, index) for one-token decode.
+    cond:  (b, n_cond, d) conditioning stream for cross-attention.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    H, hkv, dk = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    cdt = cfg.cdtype()
+    cross = cond is not None
+    window = cfg.window if kind == "local" else 0
+
+    q = L.heads_proj(p["q"], x, dtype=cdt) * (1.0 / math.sqrt(dk))
+    src = cond if cross else x
+    k = L.heads_proj(p["k"], src, dtype=cdt)
+    v = L.heads_proj(p["v"], src, dtype=cdt)
+    q = shard(q, "act_batch,act_seq,act_heads,")
+    k = shard(k, "act_batch,act_seq,act_kv_heads,")
+    v = shard(v, "act_batch,act_seq,act_kv_heads,")
+
+    rope_on = cfg.rope_style != "none" and not cross
+    interleaved = cfg.rope_style == "interleaved"
+    rot = int(dk * cfg.rope_fraction)
+    if rot % 2:
+        rot -= 1
+
+    if cache is None or s > 1:
+        # training, or whole-prompt prefill (cache is filled afterwards)
+        if rope_on:
+            if positions is None:
+                positions = jnp.arange(s)[None, :]
+            q = R.apply_rope(q, positions, rotary_dim=rot,
+                             theta=cfg.rope_theta, interleaved=interleaved)
+            k = R.apply_rope(k, positions, rotary_dim=rot,
+                             theta=cfg.rope_theta, interleaved=interleaved)
+        out = blockwise_attention(
+            q, k, v, norm_kind=cfg.score_norm, norm_params=p["score_norm"],
+            causal=not cross, window=window, softcap=cfg.attn_softcap,
+            merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk)
+        new_cache = None
+        if cache is not None and not cross:                  # prefill write
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": k_cache, "v": v_cache,
+                         "index": jnp.full((b,), s, jnp.int32)}
+    else:
+        # one-token decode: s == 1
+        idx = cache["index"]                                 # (b,) int32
+        if rope_on:
+            pos = idx[:, None]
+            q = R.apply_rope(q, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+            k = R.apply_rope(k, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+        if cross:
+            k_full, v_full = k, v                            # cond K/V, no cache
+            kv_index = jnp.full((b,), k.shape[1] - 1, jnp.int32)
+            new_cache = cache
+            out = decode_attention(q, k_full, v_full, kv_index,
+                                   norm_kind=cfg.score_norm,
+                                   norm_params=p["score_norm"], window=0,
+                                   softcap=cfg.attn_softcap, merged=merged)
+        else:
+            def upd(c, new, i):
+                return jax.vmap(
+                    lambda cb, nb, ib: jax.lax.dynamic_update_slice_in_dim(
+                        cb, nb, ib, axis=0))(c, new, i)
+            k_cache = upd(cache["k"], k.astype(cache["k"].dtype), idx)
+            v_cache = upd(cache["v"], v.astype(cache["v"].dtype), idx)
+            k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
+            v_cache = shard(v_cache, "act_batch,act_kv_seq,act_kv_heads,")
+            out = decode_attention(q, k_cache.astype(cdt),
+                                   v_cache.astype(cdt), idx,
+                                   norm_kind=cfg.score_norm,
+                                   norm_params=p["score_norm"], window=window,
+                                   softcap=cfg.attn_softcap, merged=merged)
+            new_cache = {"k": k_cache, "v": v_cache, "index": idx + 1}
+
+    out = L.heads_out(p["o"], out, dtype=cdt)
+    out = shard(out, "act_batch,act_seq,act_embed")
+    return out, new_cache

@@ -1,0 +1,70 @@
+"""ConSmax — the paper's contribution (Sec. III).
+
+Training form (Eq. 2):   ConSmax(S_i) = exp(S_i - beta) / gamma
+Inference form (Eq. 3):  ConSmax(S_i) = C * exp(S_i),  C = e^{-beta} / gamma
+
+(The paper prints C = -e^{beta}/gamma; the algebraically consistent constant
+is e^{-beta}/gamma — see DESIGN.md §1. We implement the consistent form; a
+unit test asserts train/inference paths agree.)
+
+beta and gamma are learnable per attention head (paper Sec. III-A), initialized
+beta ~ U[0.5, 2.5], gamma = 100 (paper Sec. V-A). Because neither a global max
+nor a denominator sum is needed, every score element is normalized
+independently — no reductions, no synchronization. gamma is stored via its
+reciprocal-friendly raw value; we keep gamma itself and multiply by 1/gamma so
+the exp and scale fuse into two VPU ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ConSmaxConfig
+from repro.nn import module as nn
+
+
+def consmax_init(ctx, name: str, n_heads: int, cfg: ConSmaxConfig,
+                 head_axis: str = "heads"):
+    """Per-head learnable (beta, gamma). Stored fp32 (they are tiny)."""
+    shape = (n_heads,) if cfg.per_head else (1,)
+    axes = (head_axis,) if cfg.per_head else (None,)
+    with ctx.scope(name):
+        return {
+            "beta": ctx.param("beta", shape, jnp.float32,
+                              nn.uniform_range(cfg.beta_init_lo, cfg.beta_init_hi),
+                              axes),
+            "gamma": ctx.param("gamma", shape, jnp.float32,
+                               nn.constant(cfg.gamma_init), axes),
+        }
+
+
+def merged_constant(params) -> jax.Array:
+    """Inference-time merged constant C = e^{-beta}/gamma (per head)."""
+    return jnp.exp(-params["beta"]) / params["gamma"]
+
+
+def consmax(params, scores: jax.Array, mask: jax.Array | None = None,
+            *, head_axis: int, merged: bool = False) -> jax.Array:
+    """Apply ConSmax along the last (kv) axis of `scores`.
+
+    scores: (..., q, kv) fp32 with a heads dim at `head_axis`.
+    mask:   broadcastable bool; False -> probability exactly 0.
+    merged: use the single-constant inference path (Eq. 3).
+
+    No reduction over the kv axis occurs in either path — this is the
+    synchronization-free property the hardware exploits.
+    """
+    scores = scores.astype(jnp.float32)
+    nd = scores.ndim
+    bshape = [1] * nd
+    bshape[head_axis] = -1
+    beta = params["beta"].astype(jnp.float32).reshape(bshape)
+    gamma = params["gamma"].astype(jnp.float32).reshape(bshape)
+    if merged:
+        c = jnp.exp(-beta) / gamma
+        p = c * jnp.exp(scores)
+    else:
+        p = jnp.exp(scores - beta) / gamma
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    return p

@@ -1,0 +1,106 @@
+"""Sync-free context-parallel attention (the paper's property, distributed).
+
+With the KV sequence sharded across a mesh axis, each device computes a
+*partial* attention for its KV slice. The combine step differs structurally:
+
+  ConSmax   : o = psum(o_partial)                      — 1 collective
+  Softmax   : m = pmax(m_loc); l = psum(l_loc·α);
+              o = psum(o_partial·α) / l                — 3 collectives + the
+              rescale recompute (the "partial softmax synchronization" the
+              paper quantifies at ~20% of attention latency)
+
+These are explicit shard_map kernels used by tests and by the long-context
+serving path; the GSPMD sharding-rule route (launch/specs.py seq_shard_kv)
+produces the same collective structure implicitly — the dry-run HLO shows
+exactly this collective-count difference between score_norm settings.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import consmax as CS
+
+NEG_INF = -1e30
+
+
+def _scores(q, k, softcap):
+    b, _, H, dk = q.shape
+    hkv = k.shape[2]
+    g = H // hkv
+    qg = q.reshape(b, hkv, g, dk)
+    s = jnp.einsum("bhgd,bchd->bhgc", qg, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    return s  # (b, hkv, g, Lloc)
+
+
+def cp_decode_consmax(q, k, v, index, norm_params, *, axis_name,
+                      merged=True, softcap=0.0, window=0):
+    """Inside shard_map: k/v are local (b, Lloc, hkv, d) slices. One psum."""
+    b, _, H, dk = q.shape
+    Lloc, hkv = k.shape[1], k.shape[2]
+    i = jax.lax.axis_index(axis_name)
+    kpos = i * Lloc + jnp.arange(Lloc)
+    msk = kpos[None, :] <= index[:, None]
+    if window > 0:
+        msk &= (index[:, None] - kpos[None, :]) < window
+    s = _scores(q, k, softcap)
+    g = H // hkv
+    p = CS.consmax(norm_params, s.reshape(b, H, 1, Lloc),
+                   msk[:, None, None, :], head_axis=1, merged=merged)
+    p = p.reshape(b, hkv, g, Lloc).astype(q.dtype)
+    o_partial = jnp.einsum("bhgc,bchd->bhgd", p, v,
+                           preferred_element_type=jnp.float32)
+    o = jax.lax.psum(o_partial, axis_name)            # THE one collective
+    return o.reshape(b, 1, H, dk).astype(q.dtype)
+
+
+def cp_decode_softmax(q, k, v, index, *, axis_name, softcap=0.0, window=0):
+    """The baseline: local (m, l, o) then a global (pmax, psum, psum)."""
+    b, _, H, dk = q.shape
+    Lloc, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    i = jax.lax.axis_index(axis_name)
+    kpos = i * Lloc + jnp.arange(Lloc)
+    msk = kpos[None, :] <= index[:, None]
+    if window > 0:
+        msk &= (index[:, None] - kpos[None, :]) < window
+    s = _scores(q, k, softcap)
+    s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+    m_loc = jnp.max(s, axis=-1)                        # (b,hkv,g)
+    m = jax.lax.pmax(m_loc, axis_name)                 # sync 1
+    e = jnp.where(msk[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jax.lax.psum(jnp.sum(e, axis=-1), axis_name)   # sync 2
+    o_partial = jnp.einsum("bhgc,bchd->bhgd", e.astype(q.dtype), v,
+                           preferred_element_type=jnp.float32)
+    o = jax.lax.psum(o_partial, axis_name)             # sync 3
+    o = o / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(b, 1, H, dk).astype(q.dtype)
+
+
+def make_cp_decode(mesh, axis_name: str, norm_kind: str, norm_params=None,
+                   *, softcap=0.0, window=0, merged=True):
+    """shard_map-wrapped decode over a KV cache sharded on `axis_name`.
+
+    q/index replicated on the axis; k/v sharded on their seq dim; output
+    replicated (psum). Other mesh axes stay automatic.
+    """
+    if norm_kind == "consmax":
+        fn = partial(cp_decode_consmax, norm_params=norm_params,
+                     axis_name=axis_name, merged=merged, softcap=softcap,
+                     window=window)
+    else:
+        fn = partial(cp_decode_softmax, axis_name=axis_name,
+                     softcap=softcap, window=window)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(), P(None, axis_name), P(None, axis_name), P()),
+        out_specs=P(),
+        check_vma=False,
+        axis_names=frozenset({axis_name}),   # other mesh axes stay auto
+    )

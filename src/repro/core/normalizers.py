@@ -1,0 +1,60 @@
+"""Score normalizers behind one API: softmax (reference), softermax
+(Stevens et al., DAC'21 — the paper's hardware baseline), consmax (ours).
+
+All take fp32 scores shaped (..., q, kv) with a heads axis, return fp32
+probabilities. softmax/softermax reduce over the kv axis; consmax does not.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import consmax as _consmax
+
+NEG_INF = -1e30  # avoids NaNs from (-inf) - (-inf) in fully-masked rows
+
+
+def softmax(scores, mask=None):
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)  # guard fully-masked rows
+    e = jnp.exp(scores - m)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def softermax(scores, mask=None):
+    """Base-2 softmax with running-max normalization (functional model of
+    Softermax hardware): out_i = 2^(s_i - m) / sum_j 2^(s_j - m)."""
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF)
+    e = jnp.exp2(scores - m)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    return e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+
+
+def apply_norm(kind: str, norm_params, scores, mask=None, *, head_axis: int,
+               merged: bool = False):
+    if kind == "softmax":
+        return softmax(scores, mask)
+    if kind == "softermax":
+        return softermax(scores, mask)
+    if kind == "consmax":
+        return _consmax.consmax(norm_params, scores, mask,
+                                head_axis=head_axis, merged=merged)
+    raise ValueError(f"unknown score_norm {kind!r}")
+
+
+def norm_init(ctx, name: str, kind: str, n_heads: int, cs_cfg,
+              head_axis: str = "heads"):
+    if kind == "consmax":
+        return _consmax.consmax_init(ctx, name, n_heads, cs_cfg,
+                                     head_axis=head_axis)
+    return {}

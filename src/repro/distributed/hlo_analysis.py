@@ -1,0 +1,202 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+``compiled.as_text()`` is the partitioned per-device program. We parse every
+collective op (all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute), resolve its *executed* multiplicity by walking the call
+graph (collectives inside ``while`` bodies — scan-over-layers, microbatch
+accumulation — execute trip-count times; XLA annotates
+``backend_config={"known_trip_count":{"n":K}}``), and cost each with a ring
+model on the ICI link bandwidth:
+
+  all-reduce          2 * B * (n-1)/n / bw    (reduce-scatter + all-gather)
+  all-gather          B_out * (n-1)/n / bw
+  reduce-scatter      B_in  * (n-1)/n / bw    (B_in = B_out * n)
+  all-to-all          B * (n-1)/n / bw
+  collective-permute  B / bw
+
+n = replica-group size. This is the "collective term" of §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"(condition|body|to_apply|calls)=\{?%?([\w\.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Sum of array bytes over every shape literal in the string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+    seconds: float = 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> dict:
+        return {
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+            "total_bytes": self.total_bytes,
+            "seconds": self.seconds,
+        }
+
+
+def _split_computations(hlo: str) -> tuple[dict, str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            header = stripped
+            is_entry = header.startswith("ENTRY")
+            if is_entry:
+                header = header[len("ENTRY"):].strip()
+            name = header.split("(", 1)[0].strip().lstrip("%").strip()
+            comps[name] = []
+            cur = name
+            if is_entry:
+                entry = name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(stripped)
+    return comps, entry
+
+
+def _trip_count_fallback(cond_lines: list[str]) -> int:
+    consts = {}
+    for ln in cond_lines:
+        m = re.match(r"%?([\w\.\-]+)\s*=\s*\w+\[\]\s*constant\((\-?\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln and "direction=LT" in ln:
+            tail = ln.split("compare(", 1)[1]
+            for name, val in consts.items():
+                if re.search(r"%?" + re.escape(name) + r"\b", tail):
+                    return max(val, 1)
+    return 1
+
+
+def _group_size(line: str, num_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    return num_devices
+
+
+def collective_stats(hlo: str, *, link_bw: float,
+                     num_devices: int) -> CollectiveStats:
+    comps, entry = _split_computations(hlo)
+    stats = CollectiveStats()
+    if entry is None:
+        entry = "__all__"
+        comps["__all__"] = [l.strip() for l in hlo.splitlines()]
+
+    def walk(comp: str, mult: float, depth: int):
+        if comp not in comps or depth > 16:
+            return
+        for ln in comps[comp]:
+            kind = None
+            shape_part = None
+            for k in _COLL_KINDS:
+                m = re.search(rf"=\s*(.*?)\s*{k}(?:-start)?\(", ln)
+                if m:
+                    kind, shape_part = k, m.group(1)
+                    break
+            if kind is not None:
+                out_b = shape_bytes(shape_part)
+                n = _group_size(ln, num_devices)
+                frac = (n - 1) / n if n > 1 else 0.0
+                if kind == "all-reduce":
+                    b_eff, t = out_b, 2 * out_b * frac / link_bw
+                elif kind == "all-gather":
+                    b_eff, t = out_b, out_b * frac / link_bw
+                elif kind == "reduce-scatter":
+                    b_eff, t = out_b * n, out_b * n * frac / link_bw
+                elif kind == "all-to-all":
+                    b_eff, t = out_b, out_b * frac / link_bw
+                else:
+                    b_eff, t = out_b, out_b / link_bw
+                stats.bytes_by_kind[kind] += int(b_eff * mult)
+                stats.count_by_kind[kind] += max(int(mult), 1)
+                stats.seconds += t * mult
+            if " while(" in ln:
+                tm = _TRIP_RE.search(ln)
+                body = cond = None
+                for cm in _BODY_RE.finditer(ln):
+                    if cm.group(1) == "body":
+                        body = cm.group(2)
+                    elif cm.group(1) == "condition":
+                        cond = cm.group(2)
+                trips = (int(tm.group(1)) if tm else
+                         _trip_count_fallback(comps.get(cond, [])))
+                if body:
+                    walk(body, mult * trips, depth + 1)
+            else:
+                for cm in _BODY_RE.finditer(ln):
+                    if cm.group(1) in ("to_apply", "calls"):
+                        walk(cm.group(2), mult, depth + 1)
+
+    walk(entry, 1.0, 0)
+    return stats
+
+
+# ----------------------------------------------------------- HLO FLOPs ------
+def cost_summary(compiled) -> dict:
+    """flops / bytes from XLA cost analysis of the per-device program."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }

@@ -1,0 +1,294 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE — under
+scan-over-layers / microbatch-accumulation that undercounts FLOPs and bytes
+by the trip factors (verified empirically: scan(8) reports the same flops as
+scan(1)). This module walks the post-SPMD HLO call graph, multiplies through
+``known_trip_count`` annotations, and accounts:
+
+* flops — 2*M*N*K for every ``dot`` (batch dims included via the output
+  shape), 1/elem for top-level & fused arithmetic elementwise ops;
+* transcendentals — exp/tanh/log/… (inside fusions too);
+* bytes — HBM traffic at *top-level op boundaries* only (operands + outputs
+  of fusions/dots/copies/slices; everything inside a fusion lives in
+  registers/VMEM), bookkeeping ops (tuple/gte/bitcast/parameter) excluded.
+
+The same computation-splitting and while-walking as hlo_analysis.collective_
+stats, so the three roofline terms share one call-graph semantics.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.distributed.hlo_analysis import (_BODY_RE, _TRIP_RE,
+                                            _split_computations,
+                                            _trip_count_fallback)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_NAME_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _parse_result(ln: str):
+    """'%x = <shape> op(...)' -> (name, shape_str, op) or None.
+
+    Handles tuple shapes with nested parens and /*index=N*/ comments."""
+    ln = _COMMENT_RE.sub("", ln)
+    m = _NAME_RE.match(ln)
+    if not m:
+        return None
+    name, rest = m.group(1), m.group(2).lstrip()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape, tail = rest[:end + 1], rest[end + 1:]
+    else:
+        parts = rest.split(None, 1)
+        if len(parts) != 2:
+            return None
+        shape, tail = parts
+    om = re.match(r"\s*([\w\-]+)\(", tail)
+    if not om:
+        return None
+    return name, shape, om.group(1)
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "clamp", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "remainder",
+    "power", "shift-left", "shift-right-arithmetic", "shift-right-logical",
+}
+TRANSCENDENTAL = {"exponential", "exponential-minus-one", "tanh", "log",
+                  "log-plus-one", "rsqrt", "sqrt", "logistic", "sine",
+                  "cosine", "cbrt", "atan2", "erf", "exp"}
+BOOKKEEPING = {"tuple", "get-tuple-element", "parameter", "bitcast",
+               "constant", "after-all", "custom-call", "while", "call",
+               "conditional", "iota", "partition-id", "replica-id",
+               "rng-bit-generator", "opt-barrier"}
+
+
+def _dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) array components of a shape string."""
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _nbytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(shape_str: str) -> int:
+    total = 0
+    for _, dims in _dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def _operands(line: str) -> list[str]:
+    """Top-level operand names of an op line."""
+    if "(" not in line:
+        return []
+    inner = line.split("(", 1)[1]
+    # cut at the matching close paren
+    depth = 1
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner = inner[:i]
+                break
+    names = re.findall(r"%([\w\.\-]+)", inner)
+    return names
+
+
+def _symbols(comp_name: str, comps: dict, headers: dict) -> dict:
+    """name -> shape string for every result + parameter in a computation."""
+    table: dict[str, str] = {}
+    for pname, pshape in headers.get(comp_name, []):
+        table[pname] = pshape
+    for ln in comps.get(comp_name, []):
+        p = _parse_result(ln)
+        if p:
+            table[p[0]] = p[1]
+    return table
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    dot_flops_by_comp: dict = field(default_factory=dict)
+
+    def summary(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "transcendentals": self.transcendentals}
+
+
+def _split_headers(hlo: str) -> dict:
+    """computation name -> [(param name, shape), ...] from headers."""
+    headers: dict[str, list] = {}
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not (s.endswith("{") and "->" in s):
+            continue
+        s = _COMMENT_RE.sub("", s)
+        if s.startswith("ENTRY"):
+            s = s[len("ENTRY"):].strip()
+        name = s.split("(", 1)[0].strip().lstrip("%").strip()
+        params_str = s.split("(", 1)[1].rsplit("->", 1)[0]
+        # strip trailing ') ' of the param list
+        params_str = params_str.rstrip()
+        if params_str.endswith(")"):
+            params_str = params_str[:-1]
+        plist = []
+        for pm in re.finditer(r"%?([\w\.\-]+):\s*([\w\(\)\[\]\{\},\s]*?)"
+                              r"(?=,\s*%|\s*$)", params_str):
+            plist.append((pm.group(1), pm.group(2)))
+        headers[name] = plist
+    return headers
+
+
+def hlo_cost(hlo: str) -> HloCost:
+    comps, entry = _split_computations(hlo)
+    headers = _split_headers(hlo)
+    cost = HloCost()
+    if entry is None:
+        return cost
+    symtabs: dict[str, dict] = {}
+
+    def table(comp):
+        if comp not in symtabs:
+            symtabs[comp] = _symbols(comp, comps, headers)
+        return symtabs[comp]
+
+    def walk(comp: str, mult: float, fused: bool, depth: int):
+        if comp not in comps or depth > 24:
+            return
+        tab = table(comp)
+        for ln in comps[comp]:
+            p = _parse_result(ln)
+            if not p:
+                continue
+            name, out_shape, op = p
+
+            if op == "dot":
+                ops_ = _operands(ln)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                if cm and ops_:
+                    lhs_shape = tab.get(ops_[0], "")
+                    d = _dims(lhs_shape)
+                    if d:
+                        dims = d[0][1]
+                        for ci in cm.group(1).split(","):
+                            if ci and int(ci) < len(dims):
+                                k *= dims[int(ci)]
+                flops = 2.0 * _nelems(out_shape) * k
+                cost.flops += flops * mult
+                cost.dot_flops_by_comp[comp] = (
+                    cost.dot_flops_by_comp.get(comp, 0.0) + flops * mult)
+                if not fused:
+                    b = _nbytes(out_shape) + sum(
+                        _nbytes(tab.get(o, "")) for o in _operands(ln))
+                    cost.bytes += b * mult
+            elif op in TRANSCENDENTAL:
+                cost.transcendentals += _nelems(out_shape) * mult
+                cost.flops += _nelems(out_shape) * mult
+                if not fused:
+                    cost.bytes += 2.0 * _nbytes(out_shape) * mult
+            elif op in ELEMENTWISE or op in ("reduce", "convert",
+                                             "exponential"):
+                cost.flops += _nelems(out_shape) * mult
+                if not fused:
+                    b = _nbytes(out_shape) + sum(
+                        _nbytes(tab.get(o, "")) for o in _operands(ln))
+                    cost.bytes += b * mult
+            elif op in BOOKKEEPING:
+                pass
+            else:
+                # data movers: fusion, copy, slices, gathers, broadcasts,
+                # transposes, concatenates, collectives, dus, pad, reshape
+                if not fused:
+                    # pure dtype-conversion fusions (bf16<->fp32 feeding an
+                    # fp32-accumulating dot) are a CPU-backend artifact: the
+                    # TPU MXU reads bf16 directly — don't charge a round-trip
+                    toks = set(name.split(".")[0]
+                               .replace("_fusion", "").split("_"))
+                    if op == "convert" or (
+                            op == "fusion"
+                            and toks <= {"convert", "bitcast", "wrapped"}):
+                        continue
+                    out_b = _nbytes(out_shape)
+                    op_bytes = [_nbytes(tab.get(o, ""))
+                                for o in _operands(ln)]
+                    b = out_b + sum(op_bytes)
+                    if ("dynamic-update-slice" in op
+                            or (op == "fusion"
+                                and "dynamic-update-slice" in name)):
+                        # in-place aliased update: the big operand IS the
+                        # output buffer; real traffic = read+write of the
+                        # updated slice (the remaining small operands)
+                        big = max(op_bytes, default=0)
+                        if big == out_b:
+                            b = 2 * (sum(op_bytes) - big)
+                    cost.bytes += b * mult
+
+            # recursion
+            if op == "while":
+                body = cond = None
+                tm = _TRIP_RE.search(ln)
+                for cm2 in _BODY_RE.finditer(ln):
+                    if cm2.group(1) == "body":
+                        body = cm2.group(2)
+                    elif cm2.group(1) == "condition":
+                        cond = cm2.group(2)
+                trips = (int(tm.group(1)) if tm else
+                         _trip_count_fallback(comps.get(cond, [])))
+                if body:
+                    walk(body, mult * trips, fused, depth + 1)
+            elif op == "fusion":
+                for cm2 in _BODY_RE.finditer(ln):
+                    if cm2.group(1) == "calls":
+                        walk(cm2.group(2), mult, True, depth + 1)
+            elif op in ("call", "conditional"):
+                for cm2 in _BODY_RE.finditer(ln):
+                    if cm2.group(1) in ("to_apply", "calls"):
+                        walk(cm2.group(2), mult, fused, depth + 1)
+
+    walk(entry, 1.0, False, 0)
+    return cost

@@ -1,0 +1,73 @@
+"""GPipe-style pipeline parallelism (opt-in demo; see DESIGN.md §4).
+
+The production meshes of this repo name (pod, data, model) axes — pipeline
+parallelism is provided as a composable building block for meshes that add a
+"stage" axis: stage s holds layers [s·L/S, (s+1)·L/S); microbatches stream
+through with ``collective_permute`` hops; the bubble is the standard
+(S-1)/(S-1+M) fraction.
+
+Implementation: shard_map over the stage axis. Every stage runs the same
+``stage_fn`` on its local parameter slice; activations hop stages via
+``jax.lax.ppermute``. Microbatch m enters stage 0 at tick m and exits stage
+S-1 at tick m+S-1; total ticks = M+S-1.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _pipe_body(params, xs, *, stage_fn, axis, n_stage, n_micro):
+    """params: (1, ...) local stage slice; xs: (M, b, ...) full microbatches
+    (only stage 0 consumes them). Returns (M, b, ...) outputs (valid on the
+    last stage; replicated out via ppermute ring completion)."""
+    idx = jax.lax.axis_index(axis)
+    perm = [(i, (i + 1) % n_stage) for i in range(n_stage)]
+    buf = jnp.zeros_like(xs[0])
+    outs = jnp.zeros_like(xs)
+    p_local = jax.tree.map(lambda a: a[0], params)
+
+    def tick(t, carry):
+        buf, outs = carry
+        # stage 0 ingests microbatch t (if any), others take the hopped value
+        x_in = jnp.where(
+            (idx == 0) & (t < n_micro),
+            xs[jnp.minimum(t, n_micro - 1)], buf)
+        y = stage_fn(p_local, x_in)
+        # last stage records its finished microbatch m = t - (S-1)
+        m = t - (n_stage - 1)
+        outs = jax.lax.cond(
+            (idx == n_stage - 1) & (m >= 0),
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, jnp.maximum(m, 0), 0),
+            lambda o: o, outs)
+        buf = jax.lax.ppermute(y, axis, perm)
+        return buf, outs
+
+    _, outs = jax.lax.fori_loop(0, n_micro + n_stage - 1, tick, (buf, outs))
+    # broadcast the last stage's outputs to all stages (psum of one-hot)
+    outs = jax.lax.psum(
+        jnp.where(idx == n_stage - 1, outs, jnp.zeros_like(outs)), axis)
+    return outs
+
+
+def gpipe(stage_fn, params_stacked, microbatches, *, mesh,
+          axis: str = "stage"):
+    """params_stacked: (S, ...) tree sharded over `axis`; microbatches:
+    (M, b, ...). Returns (M, b, ...) = stage_{S-1}(...stage_0(x)...)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_stage = sizes[axis]
+    n_micro = microbatches.shape[0]
+    body = partial(_pipe_body, stage_fn=stage_fn, axis=axis,
+                   n_stage=n_stage, n_micro=n_micro)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+        axis_names=frozenset({axis}),
+    )
+    return fn(params_stacked, microbatches)

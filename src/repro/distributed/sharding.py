@@ -1,0 +1,168 @@
+"""Logical-axis sharding: rules, divisibility-aware resolver, activation
+constraints.
+
+Params/activations are annotated with *logical* axis names (comma-joined
+strings produced by ``nn.module``). A rule set maps each logical name to an
+ordered list of candidate mesh-axis tuples; the resolver picks the first
+candidate that (a) exists in the mesh, (b) divides the dimension size, and
+(c) doesn't reuse a mesh axis already consumed by another dim of the same
+tensor. Anything unresolvable is replicated — never an error. Fallbacks are
+recorded so the dry-run can report them.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh: Mesh, *, fsdp=True, seq_shard_kv=False,
+               seq_shard_act: bool = False,
+               serve_tp2d: bool = False,
+               expert_shard: bool = False) -> dict:
+    """logical name -> ordered candidate mesh-axis tuples.
+
+    fsdp: True/"full" -> params+opt sharded over dp (ZeRO-3 style);
+          "zero1"/False -> params replicated (opt sharding decided by the
+          caller via a second rule set).
+    seq_shard_kv: False | True/"dp" | "model" | "2d" — KV-cache sequence axis.
+    serve_tp2d: decode-serving layout — batch REPLICATED, weights 2D-sharded
+          (d over data => activation-sized psums instead of weight gathers),
+          KV sequence over (data, model). Memory-optimal for big-model decode;
+          the attention combine is ConSmax's single psum.
+    """
+    dp = dp_axes(mesh)
+    tp = ("model",) if "model" in mesh.axis_names else ()
+    param_shard = fsdp in (True, "full")
+    if serve_tp2d:
+        seq_shard_kv = "2d"
+    if seq_shard_kv in (True, "dp"):
+        kv_axes = [dp]
+    elif seq_shard_kv == "model":
+        kv_axes = [tp]
+    elif seq_shard_kv == "2d":
+        kv_axes = [dp + tp, dp, tp]
+    else:
+        kv_axes = []
+    rules: dict[str, list[tuple]] = {
+        # ---- parameters ----
+        "vocab": [tp],
+        "embed": [dp] if param_shard else [],
+        "heads": [tp],
+        "kv_heads": [tp],
+        "mlp": [tp],
+        # expert parallelism: experts over the data axis (dispatch becomes an
+        # explicit activation-sized all-to-all via models/moe_ep.py; d-dim
+        # FSDP on expert weights is auto-dropped by the axis-conflict rule) —
+        # else replicated experts with TP inside
+        "experts": ([("data",)] if "data" in mesh.axis_names else [dp])
+        if expert_shard else [],
+        "layers": [],
+        "norm": [],
+        "conv": [],
+        "state": [],
+        # ---- activations ----
+        "act_batch": [] if serve_tp2d else [dp, dp[-1:] if dp else []],
+        "act_seq": [tp] if seq_shard_act else [],
+        "act_kv_seq": kv_axes,
+        "act_heads": [tp],
+        "act_kv_heads": [tp],
+        "act_embed": [],
+        "act_mlp": [tp],
+        "act_vocab": [tp],
+        "act_experts": [],
+    }
+    return {k: [c for c in v if c] for k, v in rules.items()}
+
+
+def resolve_spec(shape: Sequence[int], axes_str: str, mesh: Mesh,
+                 rules: dict, fallbacks: Optional[list] = None) -> P:
+    names = axes_str.split(",") if axes_str else [""] * len(shape)
+    # axes trees for scalars may produce [''] for shape ()
+    if len(names) != len(shape):
+        names = (names + [""] * len(shape))[: len(shape)]
+    used: set[str] = set()
+    out = []
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, logical in zip(shape, names):
+        assigned = None
+        for cand in rules.get(logical, []):
+            if not all(a in sizes for a in cand):
+                continue
+            if any(a in used for a in cand):
+                continue
+            prod = math.prod(sizes[a] for a in cand)
+            if prod > 1 and dim % prod == 0:
+                assigned = cand
+                break
+        if assigned is None and logical and rules.get(logical) and fallbacks is not None:
+            fallbacks.append((tuple(shape), logical, dim))
+        used.update(assigned or ())
+        out.append(assigned if assigned is None or len(assigned) > 1
+                   else assigned[0])
+    # trim trailing Nones for cleanliness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_shardings(abstract_tree, axes_tree, mesh: Mesh, rules: dict,
+                   fallbacks: Optional[list] = None):
+    """Map (ShapeDtypeStruct tree, axes-string tree) -> NamedSharding tree."""
+    def one(leaf, axes_str):
+        spec = resolve_spec(leaf.shape, axes_str, mesh, rules, fallbacks)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, abstract_tree, axes_tree)
+
+
+# ------------------------------------------------------ activation context ----
+class ShardingCtx:
+    def __init__(self, mesh: Mesh, rules: dict):
+        self.mesh = mesh
+        self.rules = rules
+
+
+_CTX: contextvars.ContextVar[Optional[ShardingCtx]] = contextvars.ContextVar(
+    "sharding_ctx", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    tok = _CTX.set(ShardingCtx(mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def ep_info():
+    """(mesh, axis_name, n_shards) when expert parallelism is active in the
+    current sharding context, else (None, None, 0)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return None, None, 0
+    cands = ctx.rules.get("experts") or []
+    if not cands:
+        return None, None, 0
+    axes = cands[0]
+    ax = axes[-1] if isinstance(axes, tuple) else axes
+    sizes = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    return ctx.mesh, ax, sizes.get(ax, 0)
+
+
+def shard(x, axes_str: str):
+    """Annotate an intermediate with logical axes; no-op outside a ctx."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = resolve_spec(x.shape, axes_str, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

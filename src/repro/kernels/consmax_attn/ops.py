@@ -1,0 +1,32 @@
+"""Jitted public wrapper for the ConSmax attention kernel.
+
+On CPU (this container) the kernel body executes in interpret mode; on a real
+TPU backend it compiles through Mosaic. Layout adapter from the model's
+(b, s, h, d) to the kernel's (b, h, s, d)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.consmax_attn.kernel import consmax_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "merged",
+                                   "bq", "bk", "interpret"))
+def consmax_attention_op(q, k, v, beta, gamma, *, causal=True, window=0,
+                         softcap=0.0, merged=False, bq=128, bk=128,
+                         interpret=None):
+    """q: (b, sq, nh, d); k, v: (b, skv, nkv, d) — model layout."""
+    interp = _on_cpu() if interpret is None else interpret
+    qt = q.swapaxes(1, 2)
+    kt = k.swapaxes(1, 2)
+    vt = v.swapaxes(1, 2)
+    out = consmax_attention(qt, kt, vt, beta, gamma, causal=causal,
+                            window=window, softcap=softcap, merged=merged,
+                            bq=bq, bk=bk, interpret=interp)
+    return out.swapaxes(1, 2)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the ConSmax attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def consmax_attention_ref(q, k, v, beta, gamma, *, causal=True, window=0,
+                          softcap=0.0, merged=False, scale=None):
+    """q: (b, nh, sq, d); k, v: (b, nkv, skv, d). fp32 math throughout."""
+    b, nh, sq, d = q.shape
+    nkv, skv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, nkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    bta = beta.astype(jnp.float32).reshape(nkv, g, 1, 1)
+    gma = gamma.astype(jnp.float32).reshape(nkv, g, 1, 1)
+    if merged:
+        p = jnp.exp(-bta) / gma * jnp.exp(s)
+    else:
+        p = jnp.exp(s - bta) / gma
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, nh, sq, d).astype(q.dtype)

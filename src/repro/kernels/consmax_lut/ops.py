@@ -1,0 +1,21 @@
+"""Jitted wrapper for the bitwidth-split LUT kernel (int8 inference path)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.consmax_lut.kernel import consmax_lut
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("scale", "block", "interpret"))
+def consmax_lut_op(scores_int8, c, *, scale: float, block: int = 1024,
+                   interpret=None):
+    interp = _on_cpu() if interpret is None else interpret
+    flat = scores_int8.reshape(-1)
+    out = consmax_lut(flat, c, scale, block=block, interpret=interp)
+    return out.reshape(scores_int8.shape)

@@ -1,0 +1,21 @@
+"""Oracle for the bitwidth-split LUT kernel: direct fp32 C*exp(scale*s)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def consmax_lut_ref(scores_int8, c, scale: float):
+    s = scores_int8.astype(jnp.float32)
+    return (jnp.asarray(c, jnp.float32) * jnp.exp(scale * s)).astype(jnp.float32)
+
+
+def split_identity_exact(scores_int8, scale: float):
+    """The paper's Eq. 4 identity, evaluated both ways in fp64-free fp32:
+    exp(16m*scale)*exp(l*scale) vs exp(s*scale). Returns max rel error."""
+    s = scores_int8.astype(jnp.int32)
+    m = (s >> 4).astype(jnp.float32)
+    l = (s & 15).astype(jnp.float32)
+    prod = jnp.exp(scale * 16.0 * m) * jnp.exp(scale * l)
+    direct = jnp.exp(scale * s.astype(jnp.float32))
+    rel = jnp.abs(prod - direct) / jnp.maximum(jnp.abs(direct), 1e-30)
+    return float(jnp.max(rel))

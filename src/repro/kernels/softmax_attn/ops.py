@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the online-softmax baseline kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.softmax_attn.kernel import softmax_attention
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "bq", "bk",
+                                   "interpret"))
+def softmax_attention_op(q, k, v, *, causal=True, window=0, softcap=0.0,
+                         bq=128, bk=128, interpret=None):
+    """q: (b, sq, nh, d); k, v: (b, skv, nkv, d) — model layout."""
+    interp = _on_cpu() if interpret is None else interpret
+    out = softmax_attention(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                            v.swapaxes(1, 2), causal=causal, window=window,
+                            softcap=softcap, bq=bq, bk=bk, interpret=interp)
+    return out.swapaxes(1, 2)

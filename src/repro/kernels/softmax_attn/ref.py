@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the online-softmax attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def softmax_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                          scale=None):
+    b, nh, sq, d = q.shape
+    nkv, skv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, nkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), NEG_INF)
+    e = jnp.where(mask[None, None, None], jnp.exp(s - m), 0.0)
+    p = e / jnp.maximum(e.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(b, nh, sq, d).astype(q.dtype)

@@ -1,0 +1,205 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below may import jax.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import SHAPES                       # noqa: E402
+from repro.configs.registry import ARCH_IDS                 # noqa: E402
+from repro.distributed import hlo_analysis as HA            # noqa: E402
+from repro.distributed.hlo_cost import hlo_cost             # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: E402
+                               make_production_mesh)
+from repro.launch.specs import cell_supported, make_cell    # noqa: E402
+
+HBM_PER_CHIP = 16 * 1024**3  # v5e
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, tag: str = "", **cell_kw) -> dict:
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    ok, why = cell_supported(arch, shape)
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(out_dir, rec, tag)
+        print(f"[dryrun] SKIP {arch} x {shape} ({mesh_name}): {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.perf_counter()
+    try:
+        cell = make_cell(arch, shape, mesh, **cell_kw)
+        with mesh:
+            lowered = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                              out_shardings=cell.out_shardings,
+                              donate_argnums=cell.donate).lower(*cell.args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+        mem = HA.memory_summary(compiled)
+        print(compiled.memory_analysis())     # proves it fits (or not)
+        hlo = compiled.as_text()
+        # trip-count-aware cost model (XLA's counts while bodies once; see
+        # distributed/hlo_cost.py) + XLA's naive numbers for reference
+        mine = hlo_cost(hlo)
+        cost = {"flops": mine.flops, "bytes": mine.bytes,
+                "transcendentals": mine.transcendentals,
+                "xla_naive": HA.cost_summary(compiled)}
+        print({k: f"{v:.3e}" for k, v in cost.items() if k != "xla_naive"})
+        coll = HA.collective_stats(hlo, link_bw=ICI_BW, num_devices=n_dev)
+
+        compute_sec = cost["flops"] / PEAK_FLOPS
+        memory_sec = cost["bytes"] / HBM_BW
+        collective_sec = coll.seconds
+        terms = {"compute": compute_sec, "memory": memory_sec,
+                 "collective": collective_sec}
+        dominant = max(terms, key=terms.get)
+        bound_sec = max(terms.values())
+        model_flops = cell.meta["model_flops"]
+        useful_bytes = cell.meta.get("useful_bytes_per_device", 0)
+        hlo_flops_global = cost["flops"] * n_dev
+        # irreducible step time for this workload on this hardware:
+        ideal_sec = max(model_flops / n_dev / PEAK_FLOPS,
+                        useful_bytes / HBM_BW)
+        peak_bytes = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+                      + mem.get("output_bytes", 0)
+                      - mem.get("alias_bytes", 0))
+
+        rec.update(
+            status="ok",
+            meta=cell.meta,
+            lower_sec=t_lower, compile_sec=t_compile,
+            cost=cost, memory=mem,
+            collectives=coll.summary(),
+            roofline={
+                "compute_sec": compute_sec,
+                "memory_sec": memory_sec,
+                "collective_sec": collective_sec,
+                "dominant": dominant,
+                "bound_sec": bound_sec,
+                "ideal_sec": ideal_sec,
+                "model_flops": model_flops,
+                "useful_bytes_per_device": useful_bytes,
+                "hlo_flops_per_device": cost["flops"],
+                "hlo_flops_global": hlo_flops_global,
+                "useful_flops_ratio": (model_flops / hlo_flops_global
+                                       if hlo_flops_global else 0.0),
+                "useful_bytes_ratio": (useful_bytes / cost["bytes"]
+                                       if cost["bytes"] else 0.0),
+                "roofline_fraction": (ideal_sec / bound_sec
+                                      if bound_sec > 0 else 0.0),
+            },
+            hbm={
+                "peak_bytes_per_device": peak_bytes,
+                "fits_16GiB": bool(peak_bytes <= HBM_PER_CHIP),
+            },
+            fallbacks=[{"shape": list(s), "logical": l, "dim": d}
+                       for s, l, d in cell.fallbacks],
+        )
+        if save_hlo:
+            import gzip
+            fname = _fname(out_dir, rec, tag) + ".hlo.gz"
+            with gzip.open(fname, "wt") as f:
+                f.write(hlo)
+        r = rec["roofline"]
+        print(f"[dryrun] OK {arch} x {shape} ({mesh_name}{'/' + tag if tag else ''}) "
+              f"compile={t_compile:.1f}s compute={r['compute_sec']:.3e}s "
+              f"memory={r['memory_sec']:.3e}s coll={r['collective_sec']:.3e}s "
+              f"dominant={dominant} roofline_frac={r['roofline_fraction']:.3f} "
+              f"peak={peak_bytes/2**30:.2f}GiB fits={rec['hbm']['fits_16GiB']}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        print(f"[dryrun] FAIL {arch} x {shape} ({mesh_name}): {e}")
+    _write(out_dir, rec, tag)
+    return rec
+
+
+def _fname(out_dir, rec, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    t = f"--{tag}" if tag else ""
+    return os.path.join(
+        out_dir, f"{rec['arch']}--{rec['shape']}--{rec['mesh']}{t}")
+
+
+def _write(out_dir, rec, tag=""):
+    with open(_fname(out_dir, rec, tag) + ".json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--score-norm", default="consmax",
+                    choices=["consmax", "softmax", "softermax"])
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--fsdp", default="full",
+                    choices=["full", "zero1", "none"])
+    ap.add_argument("--microbatch", type=int, default=4)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--q-chunk", type=int, default=2048)
+    ap.add_argument("--kv-chunk", type=int, default=1024)
+    ap.add_argument("--seq-shard-kv", default="auto",
+                    choices=["auto", "none", "dp", "model", "2d"])
+    ap.add_argument("--serve-tp2d", action="store_true")
+    ap.add_argument("--expert-shard", action="store_true")
+    ap.add_argument("--capacity-factor", type=float, default=None)
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    ssk = {"auto": None, "none": False, "dp": "dp",
+           "model": "model", "2d": "2d"}[args.seq_shard_kv]
+    kw = dict(score_norm=args.score_norm, fsdp=args.fsdp,
+              microbatch=args.microbatch, remat=args.remat,
+              q_chunk=args.q_chunk, kv_chunk=args.kv_chunk,
+              seq_shard_kv=ssk, serve_tp2d=args.serve_tp2d,
+              expert_shard=args.expert_shard,
+              capacity_factor=args.capacity_factor)
+
+    cells = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cells:
+        if args.skip_existing:
+            mesh_name = "multi_pod" if mp else "single_pod"
+            t = f"--{args.tag}" if args.tag else ""
+            fp = os.path.join(args.out, f"{a}--{s}--{mesh_name}{t}.json")
+            if os.path.exists(fp):
+                with open(fp) as f:
+                    results.append(json.load(f))
+                continue
+        results.append(run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                                save_hlo=args.save_hlo, tag=args.tag, **kw))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"/ {len(results)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production meshes. Defined as functions (never module-level constants) so
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16,16) data x model.
+    Multi-pod: 2 pods x 256 = 512 chips (2,16,16) pod x data x model."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke testing of the mesh codepath."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e-class hardware constants used by the roofline (see EXPERIMENTS.md)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

@@ -1,0 +1,263 @@
+"""Cell factory: (architecture x input-shape x mesh) -> a lowerable step.
+
+Shapes (assignment):
+  train_4k     seq 4096  gbatch 256  -> train_step
+  prefill_32k  seq 32768 gbatch 32   -> prefill_step
+  decode_32k   seq 32768 gbatch 128  -> serve_step (1 token, full KV cache)
+  long_500k    seq 524288 gbatch 1   -> serve_step; sequence-sharded KV;
+               only for sub-quadratic-decode families (ssm/hybrid) — full-
+               attention archs are skipped and recorded (DESIGN.md §5).
+
+Everything is ShapeDtypeStruct-abstract: no parameter or cache is ever
+allocated (jax.eval_shape end-to-end).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, SHAPES, TrainConfig
+from repro.configs.registry import get_config
+from repro.distributed import sharding as SH
+from repro.models import transformer as T
+from repro.serve import engine as SE
+from repro.train import step as TS
+
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    cfg = get_config(arch_id)
+    if shape_name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, ("full-attention arch: 512k dense-attention decode has "
+                       "no sub-quadratic path (skip per assignment)")
+    return True, ""
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    fn: Callable
+    args: tuple                      # abstract args
+    in_shardings: Any
+    out_shardings: Any
+    cfg: ModelConfig
+    meta: dict
+    fallbacks: list
+    donate: tuple = ()
+
+
+def _total_bytes(abstract_tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(abstract_tree):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def _sharded_bytes(abstract_tree, shardings) -> int:
+    """Per-device bytes of a sharded tree (exact, from shard shapes)."""
+    total = 0
+    leaves, tdef = jax.tree.flatten(abstract_tree)
+    shs = tdef.flatten_up_to(shardings)
+    for leaf, sh in zip(leaves, shs):
+        local = sh.shard_shape(leaf.shape)
+        n = 1
+        for d in local:
+            n *= d
+        total += n * leaf.dtype.itemsize
+    return total
+
+
+def _active_params(abstract_params, cfg: ModelConfig) -> tuple[int, int]:
+    """(N_total, N_active): MoE expert params scaled by top_k/n_experts."""
+    total = active = 0
+    def visit(tree, path):
+        nonlocal total, active
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                visit(v, path + "/" + k)
+            return
+        n = 1
+        for d in tree.shape:
+            n *= d
+        total += n
+        if "/moe/" in path and path.rsplit("/", 1)[1] in ("gate", "up", "down"):
+            active += n * cfg.moe.top_k // cfg.moe.n_experts
+        else:
+            active += n
+    visit(abstract_params, "")
+    return total, active
+
+
+def cell_total_bytes(arch_id: str, shape_name: str, *,
+                     score_norm: str = "consmax",
+                     microbatch: int = 4) -> int:
+    """Total (unsharded) irreducible bytes of a cell — see
+    meta['useful_bytes_per_device'] (= this / n_dev). Mesh-free; used to
+    patch artifacts after definition changes without recompiling."""
+    seq_len, global_batch, kind = SHAPES[shape_name]
+    cfg = get_config(arch_id, score_norm=score_norm)
+    if kind != "train":
+        cfg = cfg.replace(param_dtype="bfloat16")
+    if kind == "train":
+        tcfg = TrainConfig(global_batch=global_batch, seq_len=seq_len,
+                           microbatch=microbatch)
+        abs_state = TS.abstract_state(cfg, tcfg)
+        bspecs, _ = TS.batch_specs(cfg, seq_len, global_batch)
+        return 2 * _total_bytes(abs_state) + _total_bytes(bspecs)
+    abs_params = T.lm_abstract(cfg)
+    abs_caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, global_batch, seq_len,
+                              kv_dtype=jnp.bfloat16))
+    s_in = seq_len if kind == "prefill" else 1
+    if cfg.frontend == "tokens":
+        inp = global_batch * s_in * 4
+    else:
+        inp = global_batch * s_in * cfg.d_model * 2
+    return (_total_bytes(abs_params)
+            + (2 if kind == "prefill" else 1) * _total_bytes(abs_caches)
+            + inp)
+
+
+def make_cell(arch_id: str, shape_name: str, mesh, *,
+              score_norm: str = "consmax", fsdp="full",
+              microbatch: int = 4, remat: str = "full",
+              q_chunk: int = 2048, kv_chunk: int = 1024,
+              seq_shard_kv=None, serve_tp2d: bool = False,
+              expert_shard: bool = False,
+              capacity_factor: float | None = None,
+              overrides: dict | None = None) -> Cell:
+    seq_len, global_batch, kind = SHAPES[shape_name]
+    cfg = get_config(arch_id, score_norm=score_norm)
+    if capacity_factor is not None and cfg.moe is not None:
+        cfg = cfg.replace(moe=cfg.moe.__class__(
+            **{**cfg.moe.__dict__, "capacity_factor": capacity_factor}))
+    if kind != "train":
+        cfg = cfg.replace(param_dtype="bfloat16")   # serving: bf16 weights
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    if seq_shard_kv is None:
+        seq_shard_kv = "dp" if shape_name == "long_500k" else False
+
+    rules = SH.make_rules(mesh, fsdp=fsdp, seq_shard_kv=seq_shard_kv,
+                          serve_tp2d=serve_tp2d, expert_shard=expert_shard)
+    fallbacks: list = []
+    meta = {"arch": arch_id, "shape": shape_name, "kind": kind,
+            "seq_len": seq_len, "global_batch": global_batch,
+            "score_norm": score_norm, "mesh": dict(
+                zip(mesh.axis_names, mesh.devices.shape))}
+
+    abstract_params = T.lm_abstract(cfg)
+    n_total, n_active = _active_params(abstract_params, cfg)
+    meta["n_params"] = n_total
+    meta["n_active_params"] = n_active
+
+    def shardings_of(tree, axes):
+        return SH.tree_shardings(tree, axes, mesh, rules, fallbacks)
+
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        tcfg = TrainConfig(global_batch=global_batch, seq_len=seq_len,
+                           remat=remat, microbatch=microbatch,
+                           fsdp=fsdp in (True, "full"),
+                           q_chunk=q_chunk, kv_chunk=kv_chunk)
+        _, train_step = TS.make_train_fns(cfg, tcfg)
+        abs_state = TS.abstract_state(cfg, tcfg)
+        ax = TS.state_axes(cfg, tcfg)
+        if fsdp == "zero1":
+            # ZeRO-1: params replicated (rules above), optimizer m/v sharded
+            opt_rules = SH.make_rules(mesh, fsdp="full",
+                                      seq_shard_kv=seq_shard_kv)
+            st_sh = {
+                "params": shardings_of(abs_state["params"], ax["params"]),
+                "opt": SH.tree_shardings(abs_state["opt"], ax["opt"], mesh,
+                                         opt_rules, fallbacks),
+                "step": shardings_of(abs_state["step"], ax["step"]),
+            }
+        else:
+            st_sh = shardings_of(abs_state, ax)
+        bspecs, baxes = TS.batch_specs(cfg, seq_len, global_batch)
+        b_sh = shardings_of(bspecs, baxes)
+
+        def fn(state, batch):
+            with SH.activation_sharding(mesh, rules):
+                return train_step(state, batch)
+
+        metrics_sh = {k: repl for k in
+                      ("ce", "aux", "loss", "lr", "grad_norm")}
+        meta["model_flops"] = 6.0 * n_active * global_batch * seq_len
+        # irreducible HBM traffic at PERFECT sharding (total/n_dev): read+
+        # write optimizer state once per step — deduping replicated reads
+        # therefore raises the roofline fraction
+        n_dev = mesh.devices.size
+        meta["useful_bytes_per_device"] = (
+            2 * _total_bytes(abs_state) + _total_bytes(bspecs)) // n_dev
+        meta["state_bytes_per_device_actual"] = _sharded_bytes(abs_state,
+                                                               st_sh)
+        return Cell(arch_id, shape_name, fn, (abs_state, bspecs),
+                    (st_sh, b_sh), (st_sh, metrics_sh), cfg, meta, fallbacks,
+                    donate=(0,))
+
+    # ---- serving cells ----
+    serve_step, scfg = SE.make_decode_for_dryrun(cfg, seq_len)
+    if kind == "prefill":
+        _, prefill_step, _ = SE.make_serve_fns(cfg, scfg)
+        step = prefill_step
+        tokens_per_call = global_batch * seq_len
+    else:
+        step = serve_step
+        tokens_per_call = global_batch
+
+    abs_caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, global_batch, seq_len,
+                              kv_dtype=jnp.dtype(scfg.kv_cache_dtype)))
+    cache_sh = shardings_of(abs_caches, T.cache_axes(cfg))
+    p_sh = shardings_of(abstract_params, T.lm_axes(cfg))
+
+    s_in = seq_len if kind == "prefill" else 1
+    inputs = {}
+    in_axes = {}
+    if cfg.frontend == "tokens":
+        inputs["tokens"] = jax.ShapeDtypeStruct((global_batch, s_in), jnp.int32)
+        in_axes["tokens"] = "act_batch,act_seq"
+    else:
+        inputs["embeds"] = jax.ShapeDtypeStruct(
+            (global_batch, s_in, cfg.d_model), jnp.bfloat16)
+        in_axes["embeds"] = "act_batch,act_seq,act_embed"
+    if cfg.cross_attn:
+        inputs["cond"] = jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_cond_tokens, cfg.d_model), jnp.bfloat16)
+        in_axes["cond"] = "act_batch,,act_embed"
+    in_sh = shardings_of(inputs, in_axes)
+
+    logits_sh = NamedSharding(mesh, SH.resolve_spec(
+        (global_batch, cfg.vocab_size), "act_batch,act_vocab", mesh, rules))
+
+    def fn(params, caches, batch_inputs):
+        with SH.activation_sharding(mesh, rules):
+            return step(params, caches, batch_inputs)
+
+    meta["model_flops"] = 2.0 * n_active * tokens_per_call
+    # irreducible HBM traffic at PERFECT sharding: weights read once +
+    # caches read (+written for prefill)
+    n_dev = mesh.devices.size
+    meta["useful_bytes_per_device"] = (
+        _total_bytes(abstract_params)
+        + (2 if kind == "prefill" else 1) * _total_bytes(abs_caches)
+        + _total_bytes(inputs)) // n_dev
+    meta["state_bytes_per_device_actual"] = (
+        _sharded_bytes(abstract_params, p_sh)
+        + _sharded_bytes(abs_caches, cache_sh))
+    return Cell(arch_id, shape_name, fn,
+                (abstract_params, abs_caches, inputs),
+                (p_sh, cache_sh, in_sh), (logits_sh, cache_sh), cfg, meta,
+                fallbacks, donate=(1,))

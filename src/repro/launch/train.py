@@ -1,0 +1,59 @@
+"""Training launcher CLI.
+
+Single-host CPU (default): runs the reduced/smoke config end-to-end.
+Cluster semantics: on a real fleet each host runs this same entrypoint with
+jax.distributed.initialize() (env-driven); the mesh/rules/sharding code is
+identical to the dry-run path, so a config that passes dryrun.py launches
+unchanged.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-consmax --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt2-consmax")
+    ap.add_argument("--score-norm", default="consmax")
+    ap.add_argument("--smoke", action="store_true", default=None)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=200)
+    ap.add_argument("--distributed", action="store_true",
+                    help="initialize jax.distributed from env (fleet mode)")
+    args = ap.parse_args()
+
+    if args.distributed:
+        import jax
+        jax.distributed.initialize()
+
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import get_config
+    from repro.train.trainer import Trainer
+
+    smoke = True if args.smoke is None and args.arch != "gpt2-consmax" \
+        else bool(args.smoke)
+    cfg = get_config(args.arch, smoke=smoke, score_norm=args.score_norm)
+    tcfg = TrainConfig(global_batch=args.global_batch, seq_len=args.seq_len,
+                       lr=args.lr, warmup_steps=max(args.steps // 20, 2),
+                       total_steps=args.steps, remat=args.remat,
+                       microbatch=args.microbatch,
+                       grad_compression=args.grad_compression)
+    trainer = Trainer(cfg, tcfg, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, log_every=10)
+    hist = trainer.run(args.steps)
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}"
+          f" | stragglers flagged: {trainer.monitor.flagged}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Modality frontends. Per the assignment, VLM/audio frontends are STUBS:
+``input_specs()`` provides precomputed patch/frame embeddings at d_model, and
+the backbone consumes them directly. Token frontends embed ids. Sinusoidal
+positions serve archs without RoPE (musicgen)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import layers as L
+
+
+def sinusoidal_pos(positions, d: int):
+    """positions: (..., s) int -> (..., s, d) fp32 sinusoidal encoding."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                   / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def frontend_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None,
+                   positions=None):
+    """Returns the (b, s, d) input stream for the backbone."""
+    cdt = cfg.cdtype()
+    if cfg.frontend == "tokens":
+        x = L.embed(p["embed"], tokens, dtype=cdt)
+    else:
+        # "patches" (vlm) / "frames" (audio): precomputed embeddings (stub)
+        x = embeds.astype(cdt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cdt)
+    if cfg.sinusoidal_pos and positions is not None:
+        x = x + sinusoidal_pos(positions, cfg.d_model).astype(cdt)
+    return x

@@ -1,0 +1,169 @@
+"""Mamba-1 selective SSM block (for jamba's 7:1 mamba:attention interleave).
+
+Training/prefill uses a chunked associative scan: the (b, Lc, d_inner, N)
+discretized tensors exist only per chunk (checkpointed), so peak memory is
+bounded by the chunk length; the inter-chunk carry is the (b, d_inner, N)
+state. Decode is the exact single-step recurrence with a rolling conv state.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import module as nn
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.mamba.dt_rank or -(-cfg.d_model // 16)
+
+
+def mamba_init(ctx, name, cfg: ModelConfig):
+    mc = cfg.mamba
+    d = cfg.d_model
+    di = mc.expand * d
+    N, K, R = mc.d_state, mc.d_conv, _dt_rank(cfg)
+    pdt = cfg.pdtype()
+
+    def a_log_init(key, shape, dtype):
+        del key
+        a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+        return jnp.log(a).astype(dtype)
+
+    with ctx.scope(name):
+        return {
+            "in_proj": ctx.param("in_proj", (d, 2 * di), pdt,
+                                 nn.fan_in_normal(), ("embed", "mlp")),
+            "conv_w": ctx.param("conv_w", (K, di), pdt,
+                                nn.normal(1.0 / math.sqrt(K)), ("conv", "mlp")),
+            "conv_b": ctx.param("conv_b", (di,), pdt, nn.zeros, ("mlp",)),
+            "x_proj": ctx.param("x_proj", (di, R + 2 * N), pdt,
+                                nn.fan_in_normal(), ("mlp", None)),
+            "dt_proj": ctx.param("dt_proj", (R, di), pdt,
+                                 nn.fan_in_normal(), (None, "mlp")),
+            "dt_bias": ctx.param("dt_bias", (di,), jnp.float32,
+                                 nn.constant(-4.6), ("mlp",)),  # softplus ~ 0.01
+            "A_log": ctx.param("A_log", (di, N), jnp.float32, a_log_init,
+                               ("mlp", "state")),
+            "D": ctx.param("D", (di,), jnp.float32, nn.ones, ("mlp",)),
+            "out_proj": ctx.param("out_proj", (di, d), pdt,
+                                  nn.fan_in_normal(), ("mlp", "embed")),
+        }
+
+
+def _causal_conv(xm, w, b, K):
+    """Depthwise causal conv via K shifted adds. xm: (b, s, di)."""
+    s = xm.shape[1]
+    pad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + s] * w[j] for j in range(K))
+    return y + b
+
+
+def _ssm_chunk(carry, inp, A):
+    """One chunk of the selective scan via associative scan.
+
+    carry: h (b, di, N) fp32. inp: (xc, delta, B, C) each (b, Lc, ...).
+    """
+    h0 = carry
+    xc, delta, B, C = inp
+    dA = jnp.exp(delta[..., None] * A)                       # (b,Lc,di,N)
+    dBx = (delta * xc)[..., None] * B[:, :, None, :]         # (b,Lc,di,N)
+
+    def combine(a, b_):
+        a1, b1 = a
+        a2, b2 = b_
+        return a1 * a2, b1 * a2 + b2
+
+    Acum, Bcum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = Acum * h0[:, None] + Bcum                            # (b,Lc,di,N)
+    y = jnp.einsum("blin,bln->bli", h, C)
+    return h[:, -1], y
+
+
+def mamba_apply(p, x, cfg: ModelConfig, *, cache=None):
+    """x: (b, s, d) -> (y, new_cache)."""
+    mc = cfg.mamba
+    b, s, d = x.shape
+    di = mc.expand * d
+    N, K = mc.d_state, mc.d_conv
+    R = _dt_rank(cfg)
+    cdt = cfg.cdtype()
+
+    xz = x.astype(cdt) @ p["in_proj"].astype(cdt)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (di, N)
+
+    prefill = cache is not None and s > 1
+    if cache is None or prefill:
+        if prefill:
+            assert s % mc.chunk == 0 or s < mc.chunk, (
+                "prefill length must be a chunk multiple")
+        xc = jax.nn.silu(_causal_conv(xm, p["conv_w"].astype(cdt),
+                                      p["conv_b"].astype(cdt), K))
+        dbl = xc @ p["x_proj"].astype(cdt)
+        dr, B, C = jnp.split(dbl, [R, R + N], axis=-1)
+        delta = jax.nn.softplus(
+            (dr @ p["dt_proj"].astype(cdt)).astype(jnp.float32)
+            + p["dt_bias"])                                  # (b,s,di) fp32
+        xc32, B32, C32 = (t.astype(jnp.float32) for t in (xc, B, C))
+
+        Lc = min(mc.chunk, s)
+        n_chunks = -(-s // Lc)
+        pad = n_chunks * Lc - s
+        if pad:
+            xc32, delta, B32, C32 = (
+                jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+                for t in (xc32, delta, B32, C32))
+
+        def rs(t):  # (b, s, ...) -> (n, b, Lc, ...)
+            return t.reshape(b, n_chunks, Lc, *t.shape[2:]).swapaxes(0, 1)
+
+        h0 = jnp.zeros((b, di, N), jnp.float32)
+        step = jax.checkpoint(partial(_ssm_chunk, A=A))
+        h_last, ys = jax.lax.scan(step, h0,
+                                  (rs(xc32), rs(delta), rs(B32), rs(C32)))
+        y = ys.swapaxes(0, 1).reshape(b, n_chunks * Lc, di)[:, :s]
+        y = y + p["D"] * xc32[:, :s]
+        new_cache = None
+        if prefill:
+            tail = xm[:, max(0, s - (K - 1)):]
+            if tail.shape[1] < K - 1:
+                tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0),
+                                      (0, 0)))
+            new_cache = {"conv": tail, "h": h_last}
+    else:
+        # single-step decode: s == 1
+        conv_st = cache["conv"]                              # (b, K-1, di)
+        xm1 = xm[:, 0]
+        window = jnp.concatenate([conv_st, xm1[:, None]], axis=1)  # (b,K,di)
+        xc1 = jax.nn.silu(
+            jnp.einsum("bki,ki->bi", window.astype(cdt),
+                       p["conv_w"].astype(cdt)) + p["conv_b"].astype(cdt))
+        dbl = xc1 @ p["x_proj"].astype(cdt)
+        dr, B, C = jnp.split(dbl, [R, R + N], axis=-1)
+        delta = jax.nn.softplus(
+            (dr @ p["dt_proj"].astype(cdt)).astype(jnp.float32) + p["dt_bias"])
+        h = cache["h"]                                       # (b, di, N) fp32
+        dA = jnp.exp(delta[..., None] * A)
+        dBx = (delta * xc1.astype(jnp.float32))[..., None] * \
+            B.astype(jnp.float32)[:, None, :]
+        h = dA * h + dBx
+        y1 = jnp.einsum("bin,bn->bi", h, C.astype(jnp.float32))
+        y1 = y1 + p["D"] * xc1.astype(jnp.float32)
+        y = y1[:, None]
+        new_cache = {"conv": window[:, 1:], "h": h}
+
+    y = (y.astype(cdt) * jax.nn.silu(z)) @ p["out_proj"].astype(cdt)
+    return y, new_cache
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int):
+    mc = cfg.mamba
+    di = mc.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di), cfg.cdtype()),
+        "h": jnp.zeros((batch, di, mc.d_state), jnp.float32),
+    }

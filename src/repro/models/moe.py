@@ -1,0 +1,117 @@
+"""Top-k MoE with sort-based capacity dispatch.
+
+FLOPs-faithful: every token passes through exactly its top-k experts (plus
+capacity_factor padding), via gather -> (E, C, d) buffers -> batched expert
+GLU -> scatter-back. Tokens stay local to their data shard (expert weights are
+TP-sharded on their hidden dim over `model`), so the dispatch needs **no
+all-to-all** — this is the "expert slicing" layout; see DESIGN.md §4.
+
+Router normalizer is pluggable: "softmax" (faithful) or "consmax" (beyond-
+paper extension — learnable beta/gamma over router logits; top-k selection is
+order-preserving under the monotone map, only mixture weights change and are
+left non-unit, matching the paper's non-unit-probability tolerance).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import module as nn
+
+
+def moe_init(ctx, name, cfg: ModelConfig):
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert or cfg.d_ff, m.n_experts
+    pdt = cfg.pdtype()
+    with ctx.scope(name):
+        p = {
+            "router": ctx.param("router", (d, E), jnp.float32,
+                                nn.fan_in_normal(), ("embed", "experts")),
+            "gate": ctx.param("gate", (E, d, ff), pdt,
+                              nn.fan_in_normal(axis=1),
+                              ("experts", "embed", "mlp")),
+            "up": ctx.param("up", (E, d, ff), pdt, nn.fan_in_normal(axis=1),
+                            ("experts", "embed", "mlp")),
+            "down": ctx.param("down", (E, ff, d), pdt,
+                              nn.fan_in_normal(axis=1),
+                              ("experts", "mlp", "embed")),
+        }
+        if m.router_norm == "consmax":
+            p["beta"] = ctx.param("beta", (), jnp.float32,
+                                  nn.constant(0.0), ())
+            p["gamma"] = ctx.param("gamma", (), jnp.float32,
+                                   nn.constant(float(E)), ())
+    return p
+
+
+def _capacity(s: int, k: int, E: int, cf: float) -> int:
+    c = int(s * k * cf / E)
+    c = max(8, -(-c // 8) * 8)           # round up to multiple of 8
+    return min(c, s * k)
+
+
+def _dispatch_row(x, idx, w, p, cfg: ModelConfig, C: int, act):
+    """x: (s, d); idx, w: (s, k). Sort-based dispatch for one sequence row."""
+    s, d = x.shape
+    k = idx.shape[1]
+    E = cfg.moe.n_experts
+    cdt = cfg.cdtype()
+
+    slot_e = idx.reshape(s * k)                     # expert of each slot
+    token = jnp.arange(s * k) // k
+    order = jnp.argsort(slot_e, stable=True)
+    se = slot_e[order]
+    tok_s = token[order]
+    oh = jax.nn.one_hot(se, E, dtype=jnp.int32)     # (s*k, E)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, se[:, None],
+                              axis=1)[:, 0]         # rank within expert
+    keep = pos < C
+    bidx = jnp.where(keep, se * C + pos, E * C)     # OOB -> dropped
+
+    xs = x[tok_s].astype(cdt)
+    buf = jnp.zeros((E * C, d), cdt).at[bidx].set(xs, mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    h = act(jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(cdt))) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(cdt))
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(cdt))
+    out = out.reshape(E * C, d)
+
+    ys = out[jnp.minimum(bidx, E * C - 1)] * keep[:, None].astype(cdt)
+    y_slots = ys[jnp.argsort(order)]        # inverse-permutation gather
+    y = (y_slots.reshape(s, k, d) *
+         w.astype(cdt)[..., None]).sum(axis=1)
+    return y
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """x: (b, s, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    E, k = m.n_experts, m.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+
+    if m.router_norm == "consmax":
+        probs = jnp.exp(logits - p["beta"]) / p["gamma"]
+        w, idx = jax.lax.top_k(probs, k)            # non-unit weights kept
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch-style), always measured on normalized probs
+    probs_n = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs_n, axis=(0, 1))             # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    aux = m.aux_loss_weight * E * jnp.sum(me * ce)
+
+    C = _capacity(s, k, E, m.capacity_factor)
+    act = jax.nn.silu if cfg.mlp == "silu_glu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    y = jax.vmap(partial(_dispatch_row, p=p, cfg=cfg, C=C, act=act))(
+        x, idx, w)
+    return y, aux

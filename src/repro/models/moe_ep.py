@@ -1,0 +1,147 @@
+"""Expert-parallel MoE dispatch via explicit shard_map all-to-all.
+
+The GSPMD-automatic path (models/moe.py) is correct everywhere but its
+data-dependent scatter/gather forces conservative whole-buffer all-gathers
+when experts are sharded (measured: ~1.5 TB/step collective traffic on
+phi3.5-moe train_4k). This module is the production EP implementation:
+
+  per data-shard:  route -> sort slots by destination shard -> fixed-capacity
+  send buffers -> all_to_all -> local expert GLU (per-shard experts) ->
+  all_to_all back -> unsort -> weighted combine
+
+Traffic is exactly 2 activation-sized all-to-alls per layer (+2 in backward),
+~40x less than the automatic path. Experts are sharded over the `data` axis
+(E % n_shards == 0); within-expert hidden dims stay TP-sharded over `model`
+(left to GSPMD via the `auto` axes of shard_map).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _round8(n: int) -> int:
+    return max(8, -(-n // 8) * 8)
+
+
+def _route(x2d, p, cfg: ModelConfig):
+    """x2d: (T, d) -> (weights (T,k), experts (T,k), aux)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x2d.astype(jnp.float32), p["router"])
+    if m.router_norm == "consmax":
+        probs = jnp.exp(logits - p["beta"]) / p["gamma"]
+        w, idx = jax.lax.top_k(probs, m.top_k)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, m.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    probs_n = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs_n, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(idx[..., 0], m.n_experts,
+                                 dtype=jnp.float32), axis=0)
+    aux = m.aux_loss_weight * m.n_experts * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _ep_body(x, router, beta, gamma, gate, up, down, *, cfg: ModelConfig,
+             axis: str, n_shards: int, act):
+    """shard_map body. x: (b_loc, s, d); gate/up/down: (E_loc, d, ff)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    cdt = cfg.cdtype()
+    E, k = m.n_experts, m.top_k
+    e_loc = E // n_shards
+    T = b * s
+    slots = T * k
+    p_r = {"router": router, "beta": beta, "gamma": gamma}
+
+    x2d = x.reshape(T, d)
+    w, idx, aux = _route(x2d, p_r, cfg)
+    aux = jax.lax.pmean(aux, axis)
+
+    slot_e = idx.reshape(slots)                    # destination expert
+    slot_tok = jnp.arange(slots) // k
+    dst = slot_e // e_loc                          # destination shard
+    # capacity per (src shard -> dst shard) pair
+    c_pair = _round8(int(slots * m.capacity_factor / n_shards))
+
+    order = jnp.argsort(dst, stable=True)
+    dst_s = dst[order]
+    oh = jax.nn.one_hot(dst_s, n_shards, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - 1, dst_s[:, None],
+                              axis=1)[:, 0]
+    keep = pos < c_pair
+    bidx = jnp.where(keep, dst_s * c_pair + pos, n_shards * c_pair)
+
+    send_x = jnp.zeros((n_shards * c_pair, d), cdt).at[bidx].set(
+        x2d[slot_tok[order]].astype(cdt), mode="drop")
+    send_e = jnp.full((n_shards * c_pair,), -1, jnp.int32).at[bidx].set(
+        (slot_e % e_loc)[order], mode="drop")
+
+    # ---- all_to_all #1: tokens to their expert shard ----
+    recv_x = jax.lax.all_to_all(
+        send_x.reshape(n_shards, c_pair, d), axis, 0, 0, tiled=False)
+    recv_x = recv_x.reshape(n_shards * c_pair, d)
+    recv_e = jax.lax.all_to_all(
+        send_e.reshape(n_shards, c_pair), axis, 0, 0,
+        tiled=False).reshape(n_shards * c_pair)
+
+    # ---- local mini-dispatch over this shard's experts ----
+    valid = recv_e >= 0
+    c_loc = _round8(int(n_shards * c_pair * m.capacity_factor / max(e_loc, 1)))
+    c_loc = min(c_loc, n_shards * c_pair)
+    order2 = jnp.argsort(jnp.where(valid, recv_e, e_loc), stable=True)
+    e_s = jnp.where(valid, recv_e, e_loc)[order2]
+    oh2 = jax.nn.one_hot(e_s, e_loc, dtype=jnp.int32)
+    pos2 = jnp.take_along_axis(jnp.cumsum(oh2, axis=0) - 1,
+                               jnp.minimum(e_s, e_loc - 1)[:, None],
+                               axis=1)[:, 0]
+    keep2 = (pos2 < c_loc) & (e_s < e_loc)
+    bidx2 = jnp.where(keep2, e_s * c_loc + pos2, e_loc * c_loc)
+    buf = jnp.zeros((e_loc * c_loc, d), cdt).at[bidx2].set(
+        recv_x[order2], mode="drop").reshape(e_loc, c_loc, d)
+
+    h = act(jnp.einsum("ecd,edf->ecf", buf, gate.astype(cdt))) * \
+        jnp.einsum("ecd,edf->ecf", buf, up.astype(cdt))
+    out = jnp.einsum("ecf,efd->ecd", h, down.astype(cdt))
+    out = out.reshape(e_loc * c_loc, d)
+
+    y_sorted = out[jnp.minimum(bidx2, e_loc * c_loc - 1)] * \
+        keep2[:, None].astype(cdt)
+    y_recv = y_sorted[jnp.argsort(order2)]  # inverse-permutation gather
+
+    # ---- all_to_all #2: results back to source shards ----
+    y_send = jax.lax.all_to_all(
+        y_recv.reshape(n_shards, c_pair, d), axis, 0, 0, tiled=False)
+    y_send = y_send.reshape(n_shards * c_pair, d)
+
+    y_slot_sorted = y_send[jnp.minimum(bidx, n_shards * c_pair - 1)] * \
+        keep[:, None].astype(cdt)
+    y_slots = y_slot_sorted[jnp.argsort(order)]  # inverse-perm gather
+    y = (y_slots.reshape(T, k, d) * w.astype(cdt)[..., None]).sum(axis=1)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_ep(p, x, cfg: ModelConfig, mesh, axis: str = "data"):
+    """Expert-parallel MoE over `axis`. Experts must divide the axis size."""
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    assert cfg.moe.n_experts % n_shards == 0, (cfg.moe.n_experts, n_shards)
+    act = jax.nn.silu if cfg.mlp == "silu_glu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    body = partial(_ep_body, cfg=cfg, axis=axis, n_shards=n_shards, act=act)
+    beta = p.get("beta", jnp.zeros(()))
+    gamma = p.get("gamma", jnp.ones(()))
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(), P(), P(),
+                  P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P()),
+        check_vma=False,
+        axis_names=frozenset({axis}),
+    )
+    return fn(x, p["router"], beta, gamma, p["gate"], p["up"], p["down"])

@@ -1,0 +1,174 @@
+"""Decoder LM assembled from the block zoo, with scan-over-super-layers.
+
+The layer stack is grouped into ``n_super = n_layers / len(block_pattern)``
+homogeneous super-layers; the pattern entries are unrolled inside one
+super-layer and the stack is a single ``lax.scan`` — HLO size (and compile
+time) is independent of depth, which is what makes 64-72 layer dry-runs cheap.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import blocks as B
+from repro.models import frontends as F
+from repro.models import mamba as MB
+from repro.models import xlstm as XL
+from repro.nn import layers as L
+from repro.nn import module as nn
+
+
+def _super_init(ctx, cfg: ModelConfig):
+    return {f"b{i}": B.block_init(ctx, f"b{i}", cfg, kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def lm_init(ctx: nn.Ctx, cfg: ModelConfig):
+    pdt = cfg.pdtype()
+    if ctx.mode == "axes":
+        blocks = nn.stack_axes(nn.axes_of(_super_init, cfg))
+    else:
+        blocks = nn.vmap_init(_super_init, cfg.n_super_layers,
+                              ctx.fold("blocks"), cfg)
+    return {
+        "embed": L.embedding_init(ctx, "embed", cfg.vocab_size, cfg.d_model,
+                                  dtype=pdt),
+        "blocks": blocks,
+        "final_norm": L.norm_init(ctx, "final_norm", cfg.d_model,
+                                  kind=cfg.norm, dtype=pdt),
+    }
+
+
+def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
+             caches=None, positions=None, merged=False, remat="full",
+             q_chunk=2048, kv_chunk=1024, logits_slice=None):
+    """Forward pass.
+
+    tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
+    caches: per-super-layer pytree with leading dim n_super (decode), or None.
+    Returns (logits, new_caches, aux_loss).
+    """
+    b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
+    if positions is None and caches is None:
+        positions = jnp.arange(s)[None, :]
+    # decode: caller passes positions (= cache index) for rope/sinusoidal
+
+    x = F.frontend_apply(p, cfg, tokens=tokens, embeds=embeds,
+                         positions=positions)
+    x = shard(x, "act_batch,act_seq,act_embed")
+
+    def super_step(x, bp, cache_in):
+        new_caches = {} if cache_in is not None else None
+        aux = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.block_pattern):
+            ci = cache_in[f"b{i}"] if cache_in is not None else None
+            x, co, a = B.block_apply(
+                bp[f"b{i}"], x, cfg, kind, positions=positions, cache=ci,
+                cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk)
+            aux = aux + a
+            if cache_in is not None:
+                new_caches[f"b{i}"] = co
+        return x, new_caches, aux
+
+    if caches is None:
+        def body(x, bp):
+            y, _, aux = super_step(x, bp, None)
+            return y, aux
+        if remat == "full":
+            body = jax.checkpoint(body)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        x, auxs = jax.lax.scan(body, x, p["blocks"])
+        new_caches = None
+        aux = jnp.sum(auxs)
+    else:
+        def body(x, xs):
+            bp, ci = xs
+            y, co, aux = super_step(x, bp, ci)
+            return y, (co, aux)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, (p["blocks"], caches))
+        aux = jnp.sum(auxs)
+
+    x = L.norm_apply(p["final_norm"], x, kind=cfg.norm)
+    if logits_slice is not None:
+        x = x[:, logits_slice]
+    logits = L.unembed(p["embed"], x, dtype=cfg.cdtype())
+    if cfg.final_softcap > 0:
+        logits = (cfg.final_softcap
+                  * jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap))
+    logits = shard(logits, "act_batch,act_seq,act_vocab")
+    return logits, new_caches, aux
+
+
+# --------------------------------------------------------------- caches ----
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
+                kv_dtype=jnp.bfloat16):
+    """Per-super-layer decode caches, stacked on a leading n_super dim."""
+    def one_super():
+        c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind in ("attn", "attn_moe", "global", "local"):
+                hkv, dk = cfg.n_kv_heads, cfg.head_dim_
+                c[f"b{i}"] = {"attn": {
+                    "k": jnp.zeros((batch, max_seq, hkv, dk), kv_dtype),
+                    "v": jnp.zeros((batch, max_seq, hkv, dk), kv_dtype),
+                    "index": jnp.zeros((batch,), jnp.int32),
+                }}
+            elif kind in ("mamba", "mamba_moe"):
+                c[f"b{i}"] = {"mamba": MB.mamba_cache_init(cfg, batch)}
+            elif kind == "mlstm":
+                c[f"b{i}"] = {"mlstm": XL.mlstm_cache_init(cfg, batch)}
+            elif kind == "slstm":
+                c[f"b{i}"] = {"slstm": XL.slstm_cache_init(cfg, batch)}
+        return c
+
+    one = one_super()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_super_layers,) + a.shape).copy(),
+        one)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes tree matching init_caches output."""
+    def one_super():
+        c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind in ("attn", "attn_moe", "global", "local"):
+                c[f"b{i}"] = {"attn": {
+                    "k": "layers,act_batch,act_kv_seq,act_kv_heads,",
+                    "v": "layers,act_batch,act_kv_seq,act_kv_heads,",
+                    "index": "layers,act_batch",
+                }}
+            elif kind in ("mamba", "mamba_moe"):
+                c[f"b{i}"] = {"mamba": {
+                    "conv": "layers,act_batch,,act_mlp",
+                    "h": "layers,act_batch,act_mlp,",
+                }}
+            elif kind == "mlstm":
+                c[f"b{i}"] = {"mlstm": {
+                    "conv": "layers,act_batch,,act_mlp",
+                    "C": "layers,act_batch,act_heads,,",
+                    "n": "layers,act_batch,act_heads,",
+                    "m": "layers,act_batch,act_heads",
+                }}
+            elif kind == "slstm":
+                c[f"b{i}"] = {"slstm": {
+                    "h": "layers,act_batch,act_mlp",
+                    "c": "layers,act_batch,act_mlp",
+                    "n": "layers,act_batch,act_mlp",
+                    "m": "layers,act_batch,act_mlp",
+                }}
+        return c
+    return one_super()
+
+
+def lm_axes(cfg: ModelConfig):
+    return nn.axes_of(lm_init, cfg)
+
+
+def lm_abstract(cfg: ModelConfig):
+    return nn.abstract_init(lm_init, cfg)

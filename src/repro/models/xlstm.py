@@ -1,0 +1,335 @@
+"""xLSTM cells: chunkwise-parallel mLSTM (matrix memory, exponential gating)
+and sequential sLSTM (scalar memory, hidden-to-hidden recurrence).
+
+mLSTM's exponential gating carries a running-max stabilizer m_t — the exact
+analogue of softmax's max subtraction. Faithful mode (stabilizer="max") keeps
+it. The beyond-paper extension (stabilizer="consmax") replaces m_t with a
+learned per-head constant mu and the |q.n| denominator with a learned gamma —
+ConSmax's insight applied to the recurrent family, which removes the
+sequential max dependency from the chunkwise form (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import module as nn
+
+NEG = -1e30
+
+
+def _di(cfg):
+    return int(cfg.xlstm.proj_factor * cfg.d_model)
+
+
+# ================================================================= mLSTM ====
+def mlstm_init(ctx, name, cfg: ModelConfig):
+    xc = cfg.xlstm
+    d, h = cfg.d_model, cfg.n_heads
+    di = _di(cfg)
+    dk = di // h
+    K = xc.d_conv
+    pdt = cfg.pdtype()
+    with ctx.scope(name):
+        p = {
+            "up": ctx.param("up", (d, 2 * di), pdt, nn.fan_in_normal(),
+                            ("embed", "mlp")),
+            "conv_w": ctx.param("conv_w", (K, di), pdt,
+                                nn.normal(1.0 / math.sqrt(K)), ("conv", "mlp")),
+            "conv_b": ctx.param("conv_b", (di,), pdt, nn.zeros, ("mlp",)),
+            "wq": ctx.param("wq", (di, h, dk), pdt, nn.fan_in_normal(),
+                            ("mlp", "heads", None)),
+            "wk": ctx.param("wk", (di, h, dk), pdt, nn.fan_in_normal(),
+                            ("mlp", "heads", None)),
+            "wv": ctx.param("wv", (di, h, dk), pdt, nn.fan_in_normal(),
+                            ("mlp", "heads", None)),
+            "w_ig": ctx.param("w_ig", (di, h), jnp.float32,
+                              nn.fan_in_normal(), ("mlp", "heads")),
+            "b_ig": ctx.param("b_ig", (h,), jnp.float32, nn.constant(-10.0),
+                              ("heads",)),
+            "w_fg": ctx.param("w_fg", (di, h), jnp.float32,
+                              nn.fan_in_normal(), ("mlp", "heads")),
+            "b_fg": ctx.param("b_fg", (h,), jnp.float32, nn.constant(5.0),
+                              ("heads",)),
+            "out_scale": ctx.param("out_scale", (h, dk), jnp.float32,
+                                   nn.ones, ("heads", None)),
+            "down": ctx.param("down", (di, d), pdt, nn.fan_in_normal(),
+                              ("mlp", "embed")),
+        }
+        if xc.stabilizer == "consmax":
+            p["mu"] = ctx.param("mu", (h,), jnp.float32, nn.constant(1.0),
+                                ("heads",))
+            p["gamma"] = ctx.param("gamma", (h,), jnp.float32,
+                                   nn.constant(1.0), ("heads",))
+    return p
+
+
+def _conv_causal(xm, w, b, K):
+    s = xm.shape[1]
+    pad = jnp.pad(xm, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, j:j + s] * w[j] for j in range(K)) + b
+
+
+def _mlstm_chunk(carry, inp, *, stabilizer, mu, gamma):
+    """carry: (C (b,h,dk,dv), n (b,h,dk), m (b,h)) fp32.
+    inp: q,k,v (b,Lc,h,*) fp32; ig, logf (b,Lc,h) fp32."""
+    C_prev, n_prev, m_prev = carry
+    q, k, v, ig, logf = inp
+    q = q.swapaxes(1, 2)   # (b,h,L,dk)
+    k = k.swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+    ig = ig.swapaxes(1, 2)     # (b,h,L)
+    logf = logf.swapaxes(1, 2)
+    Lc = q.shape[2]
+
+    A = jnp.cumsum(logf, axis=-1)                      # (b,h,L) inclusive
+    W = A[..., :, None] - A[..., None, :] + ig[..., None, :]
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    W = jnp.where(mask, W, NEG)
+
+    m_inter = A + m_prev[..., None]                    # (b,h,L)
+    if stabilizer == "consmax":
+        m_t = jnp.broadcast_to(mu[None, :, None], m_inter.shape)
+        m_next = mu[None, :] + jnp.zeros_like(m_prev)
+    else:
+        m_t = jnp.maximum(m_inter, jnp.max(W, axis=-1))
+        m_next = None                                  # computed below
+
+    c_inter = jnp.exp(m_inter - m_t)                   # (b,h,L)
+    P = jnp.exp(W - m_t[..., None])
+    P = jnp.where(mask, P, 0.0)
+    S = jnp.einsum("bhld,bhjd->bhlj", q, k)
+    PS = P * S
+    num = (c_inter[..., None] * jnp.einsum("bhld,bhdv->bhlv", q, C_prev)
+           + jnp.einsum("bhlj,bhjv->bhlv", PS, v))
+    qn = (c_inter * jnp.einsum("bhld,bhd->bhl", q, n_prev)
+          + jnp.sum(PS, axis=-1))
+    if stabilizer == "consmax":
+        den = gamma[None, :, None]
+    else:
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+    h_out = num / den[..., None]                       # (b,h,L,dv)
+
+    # ---- state update to chunk end ----
+    AL = A[..., -1]                                    # (b,h)
+    upd_log = AL[..., None] - A + ig                   # (b,h,L)
+    if stabilizer == "consmax":
+        pass                                           # m_next already set
+    else:
+        m_next = jnp.maximum(AL + m_prev, jnp.max(upd_log, axis=-1))
+    w_upd = jnp.exp(upd_log - m_next[..., None])
+    decay = jnp.exp(AL + m_prev - m_next)
+    C_next = (decay[..., None, None] * C_prev
+              + jnp.einsum("bhl,bhld,bhlv->bhdv", w_upd, k, v))
+    n_next = decay[..., None] * n_prev + jnp.einsum("bhl,bhld->bhd", w_upd, k)
+    return (C_next, n_next, m_next), h_out.swapaxes(1, 2)  # (b,L,h,dv)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, *, cache=None):
+    xc_cfg = cfg.xlstm
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = _di(cfg)
+    dk = di // h
+    K = xc_cfg.d_conv
+    cdt = cfg.cdtype()
+    stab = xc_cfg.stabilizer
+    mu = p.get("mu")
+    gamma = p.get("gamma")
+
+    u = x.astype(cdt) @ p["up"].astype(cdt)
+    xm, z = jnp.split(u, 2, axis=-1)
+
+    prefill = cache is not None and s > 1
+    if cache is None or prefill:
+        xcv = jax.nn.silu(_conv_causal(xm, p["conv_w"].astype(cdt),
+                                       p["conv_b"].astype(cdt), K))
+        q = jnp.einsum("bsi,ihk->bshk", xcv, p["wq"].astype(cdt))
+        k = jnp.einsum("bsi,ihk->bshk", xcv,
+                       p["wk"].astype(cdt)) / math.sqrt(dk)
+        v = jnp.einsum("bsi,ihk->bshk", xm, p["wv"].astype(cdt))
+        ig = (jnp.einsum("bsi,ih->bsh", xcv.astype(jnp.float32), p["w_ig"])
+              + p["b_ig"])
+        logf = jax.nn.log_sigmoid(
+            jnp.einsum("bsi,ih->bsh", xcv.astype(jnp.float32), p["w_fg"])
+            + p["b_fg"])
+
+        Lc = min(xc_cfg.chunk, s)
+        n_chunks = -(-s // Lc)
+        pad = n_chunks * Lc - s
+        qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+        if pad:
+            qf, kf, vf, ig = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))
+                                      if t.ndim == 4 else
+                                      ((0, 0), (0, pad), (0, 0)))
+                              for t in (qf, kf, vf, ig))
+            logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+        def rs(t):
+            return t.reshape(b, n_chunks, Lc, *t.shape[2:]).swapaxes(0, 1)
+
+        carry0 = (jnp.zeros((b, h, dk, dk), jnp.float32),
+                  jnp.zeros((b, h, dk), jnp.float32),
+                  jnp.zeros((b, h), jnp.float32))
+        step = jax.checkpoint(partial(_mlstm_chunk, stabilizer=stab,
+                                      mu=mu, gamma=gamma))
+        carry, ys = jax.lax.scan(step, carry0,
+                                 (rs(qf), rs(kf), rs(vf), rs(ig), rs(logf)))
+        hout = ys.swapaxes(0, 1).reshape(b, n_chunks * Lc, h, dk)[:, :s]
+        new_cache = None
+        if prefill:
+            assert pad == 0, "prefill length must be a chunk multiple"
+            tail = xm[:, max(0, s - (K - 1)):]
+            if tail.shape[1] < K - 1:
+                tail = jnp.pad(tail, ((0, 0), (K - 1 - tail.shape[1], 0),
+                                      (0, 0)))
+            new_cache = {"conv": tail, "C": carry[0], "n": carry[1],
+                         "m": carry[2]}
+    else:
+        conv_st = cache["conv"]
+        xm1 = xm[:, 0]
+        window = jnp.concatenate([conv_st, xm1[:, None]], axis=1)
+        xc1 = jax.nn.silu(
+            jnp.einsum("bki,ki->bi", window.astype(cdt),
+                       p["conv_w"].astype(cdt)) + p["conv_b"].astype(cdt))
+        q = jnp.einsum("bi,ihk->bhk", xc1, p["wq"].astype(cdt)).astype(jnp.float32)
+        k = (jnp.einsum("bi,ihk->bhk", xc1, p["wk"].astype(cdt))
+             / math.sqrt(dk)).astype(jnp.float32)
+        v = jnp.einsum("bi,ihk->bhk", xm1, p["wv"].astype(cdt)).astype(jnp.float32)
+        ig = jnp.einsum("bi,ih->bh", xc1.astype(jnp.float32), p["w_ig"]) + p["b_ig"]
+        logf = jax.nn.log_sigmoid(
+            jnp.einsum("bi,ih->bh", xc1.astype(jnp.float32), p["w_fg"]) + p["b_fg"])
+        C_prev, n_prev, m_prev = cache["C"], cache["n"], cache["m"]
+        if stab == "consmax":
+            m_new = mu[None, :] + jnp.zeros_like(m_prev)
+        else:
+            m_new = jnp.maximum(logf + m_prev, ig)
+        fp = jnp.exp(logf + m_prev - m_new)
+        ip = jnp.exp(ig - m_new)
+        C = fp[..., None, None] * C_prev + ip[..., None, None] * \
+            jnp.einsum("bhd,bhv->bhdv", k, v)
+        n = fp[..., None] * n_prev + ip[..., None] * k
+        qn = jnp.einsum("bhd,bhd->bh", q, n)
+        if stab == "consmax":
+            den = gamma[None, :]
+        else:
+            den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))
+        hout = (jnp.einsum("bhd,bhdv->bhv", q, C) / den[..., None])[:, None]
+        new_cache = {"conv": window[:, 1:], "C": C, "n": n, "m": m_new}
+
+    # per-head RMS norm + gate + down-proj
+    hf = hout.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + 1e-6) * p["out_scale"]
+    y = hf.reshape(*hout.shape[:-2], di).astype(cdt)
+    y = (y * jax.nn.silu(z)) @ p["down"].astype(cdt)
+    return y, new_cache
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int):
+    h = cfg.n_heads
+    dk = _di(cfg) // h
+    return {
+        "conv": jnp.zeros((batch, cfg.xlstm.d_conv - 1, _di(cfg)), cfg.cdtype()),
+        "C": jnp.zeros((batch, h, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, h, dk), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+# ================================================================= sLSTM ====
+def slstm_init(ctx, name, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    dh = d // h
+    pdt = cfg.pdtype()
+    with ctx.scope(name):
+        p = {
+            "w": ctx.param("w", (d, 4, d), pdt, nn.fan_in_normal(),
+                           ("embed", None, "mlp")),
+            "r": ctx.param("r", (4, h, dh, dh), pdt,
+                           nn.fan_in_normal(axis=2), (None, "heads", None, None)),
+            "b": ctx.param("b", (4, d), jnp.float32, nn.zeros, (None, "mlp")),
+            "out_scale": ctx.param("out_scale", (h, dh), jnp.float32, nn.ones,
+                                   ("heads", None)),
+        }
+        if cfg.xlstm.stabilizer == "consmax":
+            p["mu"] = ctx.param("mu", (h,), jnp.float32, nn.constant(1.0),
+                                ("heads",))
+    return p
+
+
+def _slstm_step(carry, gx, *, r, stabilizer, mu, h, dh):
+    """carry: (hst, c, n, m) each (b, d) fp32 (m per (b,h)). gx: (b,4,d)."""
+    hst, c, n, m = carry
+    b = hst.shape[0]
+    gr = jnp.einsum("bhk,ghkj->bghj", hst.reshape(b, h, dh), r)
+    g = gx + gr.reshape(b, 4, h * dh)
+    it, ft, zt, ot = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    ith = it.reshape(b, h, dh)
+    fth = ft.reshape(b, h, dh)
+    if stabilizer == "consmax":
+        m_new = jnp.broadcast_to(mu[None, :, None], (b, h, dh)).reshape(b, -1)
+    else:
+        m_new = jnp.maximum(fth + m.reshape(b, h, dh), ith).reshape(b, -1)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * jnp.tanh(zt)
+    n = fp * n + ip
+    hst = jax.nn.sigmoid(ot) * c / jnp.maximum(jnp.abs(n), 1e-6)
+    return (hst, c, n, m_new), hst
+
+
+def slstm_apply(p, x, cfg: ModelConfig, *, cache=None):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    cdt = cfg.cdtype()
+    r = p["r"].astype(jnp.float32)
+    mu = p.get("mu")
+    gx = jnp.einsum("bsd,dgj->bsgj", x.astype(cdt),
+                    p["w"].astype(cdt)).astype(jnp.float32) + p["b"]
+
+    step = partial(_slstm_step, r=r, stabilizer=cfg.xlstm.stabilizer, mu=mu,
+                   h=h, dh=dh)
+    prefill = cache is not None and s > 1
+    if cache is None or prefill:
+        zero = jnp.zeros((b, d), jnp.float32)
+        carry = (zero, zero, zero, zero)
+        Lc = min(cfg.xlstm.chunk, s)
+        n_chunks = -(-s // Lc)
+        pad = n_chunks * Lc - s
+        gxp = jnp.pad(gx, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else gx
+        gxc = gxp.reshape(b, n_chunks, Lc, 4, d).swapaxes(0, 1)
+
+        def chunk(carry, gchunk):
+            return jax.lax.scan(step, carry, gchunk.swapaxes(0, 1))
+
+        carry, ys = jax.lax.scan(jax.checkpoint(chunk), carry, gxc)
+        # ys: (n_chunks, Lc, b, d) -> (b, n_chunks*Lc, d)
+        hs = ys.transpose(2, 0, 1, 3).reshape(b, n_chunks * Lc, d)[:, :s]
+        new_cache = None
+        if prefill:
+            assert pad == 0, "prefill length must be a chunk multiple"
+            new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                         "m": carry[3]}
+    else:
+        carry = (cache["h"], cache["c"], cache["n"], cache["m"])
+        carry, h1 = step(carry, gx[:, 0])
+        hs = h1[:, None]
+        new_cache = {"h": carry[0], "c": carry[1], "n": carry[2],
+                     "m": carry[3]}
+
+    hf = hs.reshape(*hs.shape[:-1], h, dh)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    hf = hf * jax.lax.rsqrt(var + 1e-6) * p["out_scale"]
+    return hf.reshape(*hs.shape[:-1], d).astype(cdt), new_cache
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    zero = jnp.zeros((batch, d), jnp.float32)
+    return {"h": zero, "c": zero, "n": zero, "m": zero}

@@ -1,0 +1,117 @@
+"""Core layers: linear, norms, embedding. Functional init/apply pairs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import module as nn
+
+
+# ---------------------------------------------------------------- linear ----
+def linear_init(ctx, name, d_in, d_out, *, bias=False, dtype=jnp.float32,
+                axes=("embed", "mlp"), scale=1.0):
+    with ctx.scope(name):
+        p = {"w": ctx.param("w", (d_in, d_out), dtype, nn.fan_in_normal(scale), axes)}
+        if bias:
+            p["b"] = ctx.param("b", (d_out,), dtype, nn.zeros, (axes[1],))
+    return p
+
+
+def linear(p, x, *, dtype=jnp.bfloat16):
+    y = x.astype(dtype) @ p["w"].astype(dtype)
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+# Fused multi-head projection: (d_model) -> (heads, head_dim)
+def heads_proj_init(ctx, name, d_model, n_heads, head_dim, *, bias=False,
+                    dtype=jnp.float32, head_axis="heads", scale=1.0):
+    with ctx.scope(name):
+        p = {"w": ctx.param("w", (d_model, n_heads, head_dim), dtype,
+                            nn.fan_in_normal(scale), ("embed", head_axis, None))}
+        if bias:
+            p["b"] = ctx.param("b", (n_heads, head_dim), dtype, nn.zeros,
+                               (head_axis, None))
+    return p
+
+
+def heads_proj(p, x, *, dtype=jnp.bfloat16):
+    y = jnp.einsum("...d,dhk->...hk", x.astype(dtype), p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def heads_out_init(ctx, name, n_heads, head_dim, d_model, *, dtype=jnp.float32,
+                   head_axis="heads", scale=1.0):
+    with ctx.scope(name):
+        return {"w": ctx.param("w", (n_heads, head_dim, d_model), dtype,
+                               nn.fan_in_normal(scale, axis=1),
+                               (head_axis, None, "embed"))}
+
+
+def heads_out(p, x, *, dtype=jnp.bfloat16):
+    return jnp.einsum("...hk,hkd->...d", x.astype(dtype), p["w"].astype(dtype))
+
+
+# ----------------------------------------------------------------- norms ----
+def rmsnorm_init(ctx, name, d, *, dtype=jnp.float32):
+    with ctx.scope(name):
+        return {"scale": ctx.param("scale", (d,), dtype, nn.zeros, ("norm",))}
+
+
+def rmsnorm(p, x, *, eps=1e-6, zero_centered=True):
+    """RMSNorm; scale stored zero-centered (gemma-style, init at 0 == gain 1)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    g = p["scale"].astype(jnp.float32)
+    g = 1.0 + g if zero_centered else g
+    return (x * g).astype(dtype)
+
+
+def layernorm_init(ctx, name, d, *, dtype=jnp.float32):
+    with ctx.scope(name):
+        return {
+            "scale": ctx.param("scale", (d,), dtype, nn.ones, ("norm",)),
+            "bias": ctx.param("bias", (d,), dtype, nn.zeros, ("norm",)),
+        }
+
+
+def layernorm(p, x, *, eps=1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_init(ctx, name, d, *, kind="rmsnorm", dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return rmsnorm_init(ctx, name, d, dtype=dtype)
+    return layernorm_init(ctx, name, d, dtype=dtype)
+
+
+def norm_apply(p, x, *, kind="rmsnorm"):
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ------------------------------------------------------------- embedding ----
+def embedding_init(ctx, name, vocab, d, *, dtype=jnp.float32):
+    # 1/sqrt(d) keeps tied-unembed logits O(1) at init
+    with ctx.scope(name):
+        return {"table": ctx.param("table", (vocab, d), dtype,
+                                   nn.normal(d ** -0.5), ("vocab", "embed"))}
+
+
+def embed(p, ids, *, dtype=jnp.bfloat16):
+    return jnp.take(p["table"].astype(dtype), ids, axis=0)
+
+
+def unembed(p, x, *, dtype=jnp.bfloat16):
+    """Tied LM head: x @ table.T -> logits over vocab."""
+    return jnp.einsum("...d,vd->...v", x.astype(dtype), p["table"].astype(dtype))

@@ -1,0 +1,141 @@
+"""Minimal functional parameter system (no flax).
+
+Params are nested dicts of jax Arrays. Logical sharding axes are recorded by
+running the *same* init code in ``mode="axes"``, where ``ctx.param`` returns a
+comma-joined logical-axes string instead of an array — the two trees are
+structurally identical by construction.
+
+RNG: keys are derived deterministically from the path string via fold_in, so
+adding a parameter never reshuffles its siblings' initializations.
+"""
+from __future__ import annotations
+
+import contextlib
+import zlib
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+Initializer = Callable[[jax.Array, tuple, jnp.dtype], jax.Array]
+
+
+def zeros(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def constant(value: float) -> Initializer:
+    def init(key, shape, dtype):
+        del key
+        return jnp.full(shape, value, dtype)
+
+    return init
+
+
+def normal(stddev: float = 1.0) -> Initializer:
+    def init(key, shape, dtype):
+        return (random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def fan_in_normal(scale: float = 1.0, axis: int = 0) -> Initializer:
+    """Lecun-style: stddev = scale / sqrt(fan_in). fan_in = prod of dims up to `axis+1`."""
+
+    def init(key, shape, dtype):
+        fan_in = 1
+        for d in shape[: axis + 1]:
+            fan_in *= d
+        std = scale / (fan_in ** 0.5)
+        return (random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+    return init
+
+
+def uniform_range(lo: float, hi: float) -> Initializer:
+    def init(key, shape, dtype):
+        return (random.uniform(key, shape, jnp.float32, lo, hi)).astype(dtype)
+
+    return init
+
+
+class Ctx:
+    """Parameter-creation context.
+
+    mode="init": ``param`` returns an initialized array (traceable — works
+      under jax.eval_shape for allocation-free abstract init).
+    mode="axes": ``param`` returns the logical-axes string; running an init
+      function in this mode yields the logical-sharding tree.
+    """
+
+    def __init__(self, key: jax.Array | None = None, mode: str = "init"):
+        assert mode in ("init", "axes"), mode
+        self.mode = mode
+        self._key = key
+        self._path: list[str] = []
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path.append(name)
+        try:
+            yield self
+        finally:
+            self._path.pop()
+
+    def fold(self, name: str) -> jax.Array:
+        """Derive a sub-key for out-of-band init (e.g. vmap_init stacks)."""
+        path = "/".join(self._path + [name])
+        return random.fold_in(self._key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+
+    def param(
+        self,
+        name: str,
+        shape: Sequence[int],
+        dtype,
+        init: Initializer,
+        axes: Sequence[str | None],
+    ):
+        assert len(axes) == len(tuple(shape)), (name, shape, axes)
+        if self.mode == "axes":
+            return ",".join("" if a is None else a for a in axes)
+        path = "/".join(self._path + [name])
+        k = random.fold_in(self._key, zlib.crc32(path.encode()) & 0x7FFFFFFF)
+        return init(k, tuple(shape), dtype)
+
+
+def axes_of(init_fn: Callable, *args, **kwargs):
+    """Run an init function in axes mode -> tree of logical-axes strings."""
+    return init_fn(Ctx(mode="axes"), *args, **kwargs)
+
+
+def abstract_init(init_fn: Callable, *args, **kwargs):
+    """Shape-only init (no allocation) -> tree of jax.ShapeDtypeStruct."""
+    return jax.eval_shape(lambda k: init_fn(Ctx(k), *args, **kwargs), random.key(0))
+
+
+def stack_axes(axes_tree, layer_axis: str = "layers"):
+    """Prepend a stacking axis (scan-over-layers) to every leaf's axes string."""
+    return jax.tree.map(
+        lambda s: layer_axis + "," + s if s != "" else layer_axis + "," , axes_tree
+    )
+
+
+def vmap_init(init_fn: Callable, n: int, key: jax.Array, *args, **kwargs):
+    """Initialize ``n`` stacked copies of a block (for scan-over-layers)."""
+    keys = random.split(key, n)
+    return jax.vmap(lambda k: init_fn(Ctx(k), *args, **kwargs))(keys)
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(p)) for p in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(jnp.size(p)) * p.dtype.itemsize for p in jax.tree.leaves(params))

@@ -1,0 +1,72 @@
+"""AdamW in pure JAX: fp32 moments regardless of param dtype, decoupled
+weight decay masked to >=2-D parameters (norm scales / biases / consmax
+beta+gamma are not decayed), global-norm gradient clipping, and
+warmup-cosine / warmup-linear schedules."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def warmup_cosine(tcfg: TrainConfig) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = tcfg.lr * step / max(tcfg.warmup_steps, 1)
+        t = (step - tcfg.warmup_steps) / max(
+            tcfg.total_steps - tcfg.warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = 0.5 * tcfg.lr * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < tcfg.warmup_steps, warm, cos)
+    return lr
+
+
+def adam_init(params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adam_update(grads, opt, params, *, lr, tcfg: TrainConfig):
+    """Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if tcfg.grad_clip > 0 else jnp.asarray(1.0)
+    count = opt["count"] + 1
+    b1, b2 = tcfg.b1, tcfg.b2
+    bc1 = 1 - b1 ** count.astype(jnp.float32)
+    bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        if tcfg.weight_decay > 0 and p.ndim >= 2:
+            step = step + tcfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt["m"])
+    flat_v = tdef.flatten_up_to(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_opt = {
+        "m": tdef.unflatten([o[1] for o in out]),
+        "v": tdef.unflatten([o[2] for o in out]),
+        "count": count,
+    }
+    return new_p, new_opt, {"grad_norm": gnorm}

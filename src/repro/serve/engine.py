@@ -1,0 +1,129 @@
+"""Serving engine: prefill + decode steps over per-layer caches, batched
+greedy/temperature sampling, and the ``serve_step`` the dry-run lowers for
+``decode_*`` shapes (one new token against a seq_len KV cache).
+
+ConSmax serving uses the merged inference constant C = e^{-beta}/gamma
+(paper Eq. 3) — ``merged=True`` throughout.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServeConfig
+from repro.models import transformer as T
+
+
+def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
+    kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
+
+    def init_caches(batch: int):
+        return T.init_caches(cfg, batch, scfg.max_seq, kv_dtype=kv_dtype)
+
+    def prefill_step(params, caches, batch_inputs):
+        """Whole-prompt prefill; returns (last-position logits, caches)."""
+        kw = _model_inputs(cfg, batch_inputs)
+        s = (kw.get("tokens") if "tokens" in kw else kw["embeds"]).shape[1]
+        logits, caches, _ = T.lm_apply(
+            params, cfg, caches=caches, merged=True,
+            positions=jnp.arange(s)[None, :], logits_slice=slice(-1, None),
+            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
+        return logits[:, -1], caches
+
+    def decode_step(params, caches, batch_inputs):
+        """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d)."""
+        kw = _model_inputs(cfg, batch_inputs)
+        index = _first_index(caches)
+        positions = index[:, None] if index is not None else None
+        logits, caches, _ = T.lm_apply(
+            params, cfg, caches=caches, merged=True,
+            positions=positions, **kw)
+        return logits[:, -1], caches
+
+    return init_caches, prefill_step, decode_step
+
+
+def _model_inputs(cfg: ModelConfig, batch_inputs: dict) -> dict:
+    kw = {}
+    if cfg.frontend == "tokens":
+        kw["tokens"] = batch_inputs["tokens"]
+    else:
+        kw["embeds"] = batch_inputs["embeds"]
+    if cfg.cross_attn:
+        kw["cond"] = batch_inputs["cond"]
+    return kw
+
+
+def _first_index(caches):
+    """Current decode position: the index field of the first attention cache
+    (all layers agree). Attention-free archs (xlstm) use no positions — the
+    recurrence itself encodes order — so None is returned."""
+    leaves = [v for path, v in _iter_paths(caches) if path.endswith("index")]
+    return leaves[0][0] if leaves else None  # strip layer-stack dim
+
+
+def _iter_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _iter_paths(v, f"{prefix}{k}/")
+    else:
+        yield prefix[:-1], tree
+
+
+class ServeSession:
+    """Batched autoregressive generation driver (greedy / temperature)."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
+                 positions_fallback: bool = False):
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        ic, pf, dc = make_serve_fns(cfg, scfg)
+        self._init_caches = ic
+        self._prefill = jax.jit(pf)
+        self._decode = jax.jit(dc)
+        self._pos = None  # fallback position counter for SSM-only archs
+        self._positions_fallback = positions_fallback
+
+    def generate(self, prompts: jnp.ndarray, *, steps: int,
+                 temperature: float = 0.0, key=None, cond=None):
+        """prompts: (b, s) int tokens (token frontend). Returns (b, steps)."""
+        b, s = prompts.shape
+        caches = self._init_caches(b)
+        inputs = {"tokens": prompts}
+        if cond is not None:
+            inputs["cond"] = cond
+        if self.cfg.frontend != "tokens":
+            raise NotImplementedError("embedding-frontend generation")
+        logits, caches = self._prefill(self.params, caches, inputs)
+        outs = []
+        tok = self._sample(logits, temperature, key, 0)
+        for i in range(steps):
+            outs.append(tok)
+            step_in = {"tokens": tok[:, None]}
+            if cond is not None:
+                step_in["cond"] = cond
+            logits, caches = self._decode(self.params, caches, step_in)
+            tok = self._sample(logits, temperature, key, i + 1)
+        return jnp.stack(outs, axis=1)
+
+    @staticmethod
+    def _sample(logits, temperature, key, i):
+        if temperature <= 0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+
+# --------------------------------------------------- dry-run entry point ----
+def make_decode_for_dryrun(cfg: ModelConfig, seq_len: int):
+    """serve_step(params, caches, tokens) with the cache index pinned at
+    seq_len-1 — the decode_32k / long_500k cell semantics."""
+    scfg = ServeConfig(max_seq=seq_len)
+    _, _, decode_step = make_serve_fns(cfg, scfg)
+
+    def serve_step(params, caches, batch_inputs):
+        return decode_step(params, caches, batch_inputs)
+
+    return serve_step, scfg

@@ -1,0 +1,142 @@
+"""Train-step factory: loss, grad accumulation (microbatching), AdamW, and
+the state/axes trees the launcher uses for sharded jit."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.sharding import shard
+from repro.models import transformer as T
+from repro.nn import module as nn
+from repro.optim import adamw
+from repro.optim.compression import ef_compress_grads
+
+
+def cross_entropy(logits, labels, *, z_weight: float = 1e-4):
+    """logits: (b, s, V) any float dtype; labels: (b, s) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(logz - ll)
+    if z_weight:
+        loss = loss + z_weight * jnp.mean(jnp.square(logz))
+    return loss
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    def loss_fn(params, batch):
+        kw = {}
+        if cfg.frontend == "tokens":
+            kw["tokens"] = batch["tokens"]
+        else:
+            kw["embeds"] = batch["embeds"]
+        if cfg.cross_attn:
+            kw["cond"] = batch["cond"]
+        logits, _, aux = T.lm_apply(params, cfg, remat=tcfg.remat,
+                                    q_chunk=tcfg.q_chunk,
+                                    kv_chunk=tcfg.kv_chunk, **kw)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_fns(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns (init_state, train_step).
+
+    state = {"params", "opt", "ef" (optional compression residual), "step"}.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg)
+    lr_fn = adamw.warmup_cosine(tcfg)
+
+    def init_state(key):
+        params = T.lm_init(nn.Ctx(key), cfg)
+        state = {"params": params, "opt": adamw.adam_init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        if tcfg.grad_compression == "int8_ef":
+            state["ef"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return state
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            n = tcfg.microbatch
+            def resh(x):
+                b = x.shape[0]
+                assert b % n == 0, (b, n)
+                return x.reshape(n, b // n, *x.shape[1:])
+            micro = jax.tree.map(resh, batch)
+
+            def mb_step(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                g32 = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                   acc[0], g)
+                return (g32, acc[1] + l, {k: acc[2][k] + v
+                                          for k, v in m.items()}), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (g32, lsum, msum), _ = jax.lax.scan(
+                mb_step, (zeros, jnp.zeros(()), {"ce": jnp.zeros(()),
+                                                 "aux": jnp.zeros(())}),
+                micro)
+            inv = 1.0 / n
+            grads = jax.tree.map(lambda g: g * inv, g32)
+            return grads, lsum * inv, {k: v * inv for k, v in msum.items()}
+        (l, m), g = grad_fn(params, batch)
+        return g, l, m
+
+    def train_step(state, batch):
+        grads, loss, metrics = compute_grads(state["params"], batch)
+        new_ef = None
+        if tcfg.grad_compression == "int8_ef":
+            grads, new_ef = ef_compress_grads(grads, state["ef"])
+        lr = lr_fn(state["step"])
+        params, opt, om = adamw.adam_update(
+            grads, state["opt"], state["params"], lr=lr, tcfg=tcfg)
+        new_state = {"params": params, "opt": opt, "step": state["step"] + 1}
+        if new_ef is not None:
+            new_state["ef"] = new_ef
+        metrics = dict(metrics, loss=loss, lr=lr, **om)
+        return new_state, metrics
+
+    return init_state, train_step
+
+
+def state_axes(cfg: ModelConfig, tcfg: TrainConfig):
+    pax = T.lm_axes(cfg)
+    ax = {"params": pax,
+          "opt": {"m": pax, "v": pax, "count": ""},
+          "step": ""}
+    if tcfg.grad_compression == "int8_ef":
+        ax["ef"] = pax
+    return ax
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig):
+    init_state, _ = make_train_fns(cfg, tcfg)
+    return jax.eval_shape(lambda k: init_state(k), jax.random.key(0))
+
+
+def batch_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    """ShapeDtypeStructs + logical axes for one training batch."""
+    import jax.numpy as jnp  # noqa: shadows for clarity
+    sds = jax.ShapeDtypeStruct
+    b, s = global_batch, seq_len
+    specs, axes = {}, {}
+    if cfg.frontend == "tokens":
+        specs["tokens"] = sds((b, s), jnp.int32)
+        axes["tokens"] = "act_batch,act_seq"
+    else:
+        specs["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        axes["embeds"] = "act_batch,act_seq,act_embed"
+    if cfg.cross_attn:
+        specs["cond"] = sds((b, cfg.n_cond_tokens, cfg.d_model), jnp.bfloat16)
+        axes["cond"] = "act_batch,,act_embed"
+    specs["labels"] = sds((b, s), jnp.int32)
+    axes["labels"] = "act_batch,act_seq"
+    return specs, axes

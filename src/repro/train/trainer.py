@@ -1,0 +1,139 @@
+"""Trainer loop with production concerns: sharded jit, periodic async
+checkpointing, preemption-signal save, deterministic data resume, and a
+straggler monitor.
+
+Fault-tolerance model (see DESIGN.md §4):
+* data is a pure function of (seed, step, shard) — restart anywhere, any
+  number of shards (elastic), zero data state in checkpoints;
+* checkpoints restore onto a different mesh (elastic resharding);
+* SIGTERM triggers save-and-exit (preemption hook);
+* the straggler monitor flags steps slower than ``straggler_factor`` x the
+  running median — on a fleet this feeds eviction/alerting; here it logs and
+  counts (CPU container has nothing to evict).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.checkpoint.store import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.distributed import sharding as SH
+from repro.train import step as S
+
+
+class StragglerMonitor:
+    def __init__(self, factor: float = 2.5, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.flagged = 0
+
+    def record(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) <= self.warmup:
+            return False
+        med = float(np.median(self.times[-50:]))
+        slow = dt > self.factor * med
+        self.flagged += int(slow)
+        return slow
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, *,
+                 mesh=None, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 200, log_every: int = 10,
+                 seed: Optional[int] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.mesh = mesh
+        self.log_every = log_every
+        self.ckpt_every = ckpt_every
+        self.monitor = StragglerMonitor()
+        self.history: list[dict] = []
+        self._preempted = False
+
+        self.corpus = SyntheticCorpus(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch,
+            seed=tcfg.seed if seed is None else seed))
+        init_state, train_step = S.make_train_fns(cfg, tcfg)
+
+        if mesh is not None:
+            rules = SH.make_rules(mesh, fsdp=tcfg.fsdp)
+            ax = S.state_axes(cfg, tcfg)
+            abs_state = S.abstract_state(cfg, tcfg)
+            self.state_shardings = SH.tree_shardings(abs_state, ax, mesh, rules)
+            bspecs, baxes = S.batch_specs(cfg, tcfg.seq_len, tcfg.global_batch)
+            self.batch_shardings = SH.tree_shardings(bspecs, baxes, mesh, rules)
+
+            def wrapped(state, batch):
+                with SH.activation_sharding(mesh, rules):
+                    return train_step(state, batch)
+
+            self._train_step = jax.jit(
+                wrapped,
+                in_shardings=(self.state_shardings, self.batch_shardings),
+                out_shardings=(self.state_shardings, None),
+                donate_argnums=(0,))
+            with mesh:
+                self.state = jax.jit(
+                    init_state, out_shardings=self.state_shardings)(
+                        jax.random.key(tcfg.seed))
+        else:
+            self._train_step = jax.jit(train_step, donate_argnums=(0,))
+            self.state = init_state(jax.random.key(tcfg.seed))
+
+        self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        if self.ckpt is not None:
+            last = self.ckpt.latest_step()
+            if last is not None:
+                self.state = self.ckpt.restore(
+                    last,
+                    shardings=getattr(self, "state_shardings", None))
+                print(f"[trainer] resumed from step {last}")
+
+    # --------------------------------------------------------------- run ----
+    def _install_preemption_hook(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:
+            pass  # non-main thread (tests)
+
+    def step_index(self) -> int:
+        return int(jax.device_get(self.state["step"]))
+
+    def run(self, num_steps: int):
+        self._install_preemption_hook()
+        start = self.step_index()
+        for step in range(start, start + num_steps):
+            batch = self.corpus.global_batch_arrays(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self._train_step(self.state, batch)
+            metrics = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            slow = self.monitor.record(dt)
+            metrics.update(step=step, sec=dt)
+            self.history.append(metrics)
+            if step % self.log_every == 0 or slow:
+                flag = " [straggler]" if slow else ""
+                print(f"[trainer] step={step} loss={metrics['loss']:.4f} "
+                      f"lr={metrics['lr']:.2e} gnorm={metrics['grad_norm']:.2f} "
+                      f"{dt*1e3:.0f}ms{flag}")
+            if self.ckpt and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(self.state, step + 1, blocking=False)
+            if self._preempted:
+                print("[trainer] preemption signal — saving and exiting")
+                if self.ckpt:
+                    self.ckpt.save(self.state, step + 1, blocking=True)
+                break
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history

@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device dry-run sets its
+# own XLA_FLAGS in launch/dryrun.py — never globally).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,127 @@
+"""Blockwise attention vs direct reference; GQA; decode; local windows."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import ConSmaxConfig, ModelConfig
+from repro.core import attention as A
+from repro.core import normalizers as N
+from repro.nn.module import Ctx
+
+CFG = ModelConfig(arch_id="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=97,
+                  score_norm="consmax")
+
+
+def _qkv(key, b=2, sq=24, skv=24, nh=4, nkv=2, d=8):
+    ks = random.split(key, 3)
+    return (random.normal(ks[0], (b, sq, nh, d)),
+            random.normal(ks[1], (b, skv, nkv, d)),
+            random.normal(ks[2], (b, skv, nkv, d)))
+
+
+def _direct(q, k, v, norm_kind, norm_params, causal=True, window=0):
+    b, sq, nh, d = q.shape
+    nkv = k.shape[2]
+    g = nh // nkv
+    s = jnp.einsum("bqhgd,bchd->bhgqc", q.reshape(b, sq, nkv, g, d), k)
+    qpos, kpos = jnp.arange(sq)[:, None], jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    p = N.apply_norm(norm_kind, norm_params,
+                     s.reshape(b, nh, sq, -1), mask[None, None], head_axis=1)
+    p = p.reshape(b, nkv, g, sq, -1)
+    return jnp.einsum("bhgqc,bchd->bqhgd", p, v).reshape(b, sq, nh, d)
+
+
+@pytest.fixture(scope="module")
+def norm_params():
+    from repro.core.consmax import consmax_init
+    return consmax_init(Ctx(random.key(0)), "n", 4, ConSmaxConfig())
+
+
+@pytest.mark.parametrize("norm", ["softmax", "softermax", "consmax"])
+@pytest.mark.parametrize("qc,kc", [(8, 8), (24, 24), (5, 7)])
+def test_blockwise_matches_direct(norm, qc, kc, norm_params):
+    q, k, v = _qkv(random.key(1))
+    bw = A.blockwise_attention(q, k, v, norm_kind=norm,
+                               norm_params=norm_params, q_chunk=qc,
+                               kv_chunk=kc)
+    ref = _direct(q, k, v, norm, norm_params)
+    np.testing.assert_allclose(np.asarray(bw), np.asarray(ref), atol=3e-4)
+
+
+@pytest.mark.parametrize("norm", ["softmax", "consmax"])
+def test_blockwise_window(norm, norm_params):
+    q, k, v = _qkv(random.key(2))
+    bw = A.blockwise_attention(q, k, v, norm_kind=norm,
+                               norm_params=norm_params, q_chunk=8, kv_chunk=8,
+                               window=6)
+    ref = _direct(q, k, v, norm, norm_params, window=6)
+    np.testing.assert_allclose(np.asarray(bw), np.asarray(ref), atol=3e-4)
+
+
+def test_gqa_equals_repeated_kv(norm_params):
+    """GQA grouping == explicitly repeating KV heads to all query heads."""
+    q, k, v = _qkv(random.key(3))
+    out = A.blockwise_attention(q, k, v, norm_kind="softmax",
+                                norm_params={}, q_chunk=8, kv_chunk=8)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    out_rep = A.blockwise_attention(q, k_rep, v_rep, norm_kind="softmax",
+                                    norm_params={}, q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_rep),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("norm", ["softmax", "consmax"])
+def test_decode_matches_blockwise_row(norm, norm_params):
+    """decode_attention of the last position == last row of full attention."""
+    q, k, v = _qkv(random.key(4))
+    full = A.blockwise_attention(q, k, v, norm_kind=norm,
+                                 norm_params=norm_params, q_chunk=8,
+                                 kv_chunk=8)
+    idx = jnp.full((2,), 23, jnp.int32)
+    one = A.decode_attention(q[:, -1:], k, v, idx, norm_kind=norm,
+                             norm_params=norm_params, merged=False)
+    np.testing.assert_allclose(np.asarray(one[:, 0]),
+                               np.asarray(full[:, -1]), atol=3e-4)
+
+
+def test_attention_apply_prefill_then_decode(norm_params):
+    """prefill cache write + single decode == teacher-forced positions."""
+    cfg = CFG
+    p = A.attention_init(Ctx(random.key(0)), "attn", cfg)
+    x = random.normal(random.key(5), (2, 17, 64)).astype(jnp.bfloat16)
+    full, _ = A.attention_apply(p, x, cfg, q_chunk=8, kv_chunk=8)
+    dk = cfg.head_dim_
+    cache = {"k": jnp.zeros((2, 32, 2, dk), jnp.bfloat16),
+             "v": jnp.zeros((2, 32, 2, dk), jnp.bfloat16),
+             "index": jnp.zeros((2,), jnp.int32)}
+    _, cache = A.attention_apply(p, x[:, :16], cfg, cache=cache,
+                                 q_chunk=8, kv_chunk=8)
+    assert int(cache["index"][0]) == 16
+    out1, cache = A.attention_apply(p, x[:, 16:17], cfg, cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(out1.astype(jnp.float32)),
+        np.asarray(full[:, 16:17].astype(jnp.float32)), atol=3e-2)
+
+
+def test_cross_attention_no_causal(norm_params):
+    cfg = CFG.replace(cross_attn=True, n_cond_tokens=8)
+    p = A.attention_init(Ctx(random.key(0)), "x", cfg, cross=True)
+    x = random.normal(random.key(6), (2, 12, 64)).astype(jnp.bfloat16)
+    cond = random.normal(random.key(7), (2, 8, 64)).astype(jnp.bfloat16)
+    out, _ = A.attention_apply(p, x, cfg, cond=cond, q_chunk=4, kv_chunk=4)
+    assert out.shape == (2, 12, 64)
+    # permuting *queries* permutes outputs identically (no positional mixing)
+    perm = jnp.array([3, 1, 0, 2, 5, 4, 7, 6, 9, 8, 11, 10])
+    cfg_nr = cfg.replace(rope_style="none")
+    out_a, _ = A.attention_apply(p, x, cfg_nr, cond=cond)
+    out_b, _ = A.attention_apply(p, x[:, perm], cfg_nr, cond=cond)
+    np.testing.assert_allclose(np.asarray(out_a[:, perm]), np.asarray(out_b),
+                               atol=2e-2)

@@ -1,0 +1,108 @@
+"""Unit tests for the paper's core: ConSmax normalizer (Eq. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import ConSmaxConfig
+from repro.core import consmax as C
+from repro.core import normalizers as N
+from repro.nn.module import Ctx
+
+
+def _params(nh=4):
+    return C.consmax_init(Ctx(random.key(0)), "cs", nh, ConSmaxConfig())
+
+
+def test_init_ranges():
+    p = _params(64)
+    assert p["beta"].shape == (64,)
+    assert float(p["beta"].min()) >= 0.5 and float(p["beta"].max()) <= 2.5
+    np.testing.assert_allclose(np.asarray(p["gamma"]), 100.0)
+
+
+def test_eq2_matches_formula():
+    p = _params()
+    s = random.normal(random.key(1), (2, 4, 8, 16))
+    out = C.consmax(p, s, head_axis=1)
+    expected = jnp.exp(s - p["beta"][None, :, None, None]) / 100.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               rtol=1e-6)
+
+
+def test_merged_constant_equivalence():
+    """Eq. 3 (inference, merged C) == Eq. 2 (training) exactly in math; the
+    paper's printed C = -e^beta/gamma is a typo — this asserts our fix."""
+    p = _params()
+    s = random.normal(random.key(2), (2, 4, 8, 16)) * 3
+    train = C.consmax(p, s, head_axis=1, merged=False)
+    infer = C.consmax(p, s, head_axis=1, merged=True)
+    np.testing.assert_allclose(np.asarray(train), np.asarray(infer),
+                               rtol=2e-6)
+    c = C.merged_constant(p)
+    assert (np.asarray(c) > 0).all(), "consistent C must be positive"
+
+
+def test_masking_exact_zero():
+    p = _params()
+    s = random.normal(random.key(3), (1, 4, 6, 6))
+    mask = jnp.tril(jnp.ones((6, 6), bool))[None, None]
+    out = C.consmax(p, s, mask, head_axis=1)
+    assert (np.asarray(out)[..., ~np.tril(np.ones((6, 6), bool))] == 0).all()
+
+
+def test_no_kv_reduction_property():
+    """The sync-free property: output at position j is independent of every
+    other score in the row (unlike softmax)."""
+    p = _params()
+    s = random.normal(random.key(4), (1, 4, 2, 8))
+    out1 = C.consmax(p, s, head_axis=1)
+    s2 = s.at[..., 5].set(100.0)  # perturb one element
+    out2 = C.consmax(p, s2, head_axis=1)
+    # all other positions unchanged:
+    np.testing.assert_array_equal(np.asarray(out1[..., :5]),
+                                  np.asarray(out2[..., :5]))
+    np.testing.assert_array_equal(np.asarray(out1[..., 6:]),
+                                  np.asarray(out2[..., 6:]))
+    # softmax, by contrast, changes everywhere:
+    sm1, sm2 = N.softmax(s), N.softmax(s2)
+    assert float(jnp.max(jnp.abs(sm1[..., :5] - sm2[..., :5]))) > 1e-8
+
+
+def test_gradients_flow_to_beta_gamma():
+    p = _params()
+    s = random.normal(random.key(5), (1, 4, 8, 8))
+
+    def loss(p):
+        return jnp.sum(C.consmax(p, s, head_axis=1) ** 2)
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["beta"]).sum()) > 0
+    assert float(jnp.abs(g["gamma"]).sum()) > 0
+
+
+def test_softmax_matches_jax():
+    s = random.normal(random.key(6), (3, 2, 5, 7))
+    np.testing.assert_allclose(np.asarray(N.softmax(s)),
+                               np.asarray(jax.nn.softmax(s, axis=-1)),
+                               rtol=1e-6)
+
+
+def test_softermax_is_base2_and_normalized():
+    s = random.normal(random.key(7), (2, 3, 4, 9))
+    out = N.softermax(s)
+    np.testing.assert_allclose(np.asarray(out.sum(-1)), 1.0, rtol=1e-5)
+    # base-2: equals softmax of s*ln2
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(jax.nn.softmax(s * np.log(2.0), axis=-1)),
+        rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["softmax", "softermax", "consmax"])
+def test_apply_norm_dispatch(kind):
+    p = _params()
+    s = random.normal(random.key(8), (1, 4, 3, 5))
+    out = N.apply_norm(kind, p, s, head_axis=1)
+    assert out.shape == s.shape
+    assert not bool(jnp.isnan(out).any())

@@ -1,0 +1,54 @@
+"""Collective-bytes parser unit tests on canned HLO snippets."""
+from repro.distributed.hlo_analysis import (collective_stats, shape_bytes)
+
+HLO = """
+HloModule test
+
+%wide.body (arg: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar = f32[64]{0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[64]) tuple(%i, %ar)
+}
+
+%wide.cond (arg: (s32[], f32[64])) -> pred[] {
+  %c = s32[] constant(12)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main_spmd (p0: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(%p0), replica_groups={{0,1},{2,3},{4,5},{6,7}}, dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(%ag), replica_groups=[1,8]<=[8], to_apply=%add
+  %cp = f32[16]{0} collective-permute(%rs), source_target_pairs={{0,1}}
+  %w = (s32[], f32[64]) while(%t0), condition=%wide.cond, body=%wide.body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[64]{0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[64]{0}") == 256
+    assert shape_bytes("bf16[16,512]") == 16384
+    assert shape_bytes("(f32[4], s8[8])") == 24
+    assert shape_bytes("pred[]") == 1  # scalar -> 1 elem
+
+
+def test_collective_stats_counts_and_trips():
+    st = collective_stats(HLO, link_bw=50e9, num_devices=8)
+    # all-gather once: out 128*4 = 512B; group size 2
+    assert st.bytes_by_kind["all-gather"] == 512
+    # reduce-scatter: out 64B * group 8 = 512B input
+    assert st.bytes_by_kind["reduce-scatter"] == 512
+    # collective-permute once: 64B
+    assert st.bytes_by_kind["collective-permute"] == 64
+    # all-reduce inside while body with trip count 12: 12 * 256B
+    assert st.bytes_by_kind["all-reduce"] == 12 * 256
+    assert st.count_by_kind["all-reduce"] == 12
+    assert st.seconds > 0
+
+
+def test_ring_model_math():
+    st = collective_stats(HLO, link_bw=1.0, num_devices=8)
+    # all-gather: 512 * (2-1)/2 = 256 "seconds" at bw=1
+    # reduce-scatter: 512 * 7/8 = 448 ; permute: 64
+    # all-reduce: 12 * 2 * 256 * 3/4 = 4608
+    expected = 256 + 448 + 64 + 4608
+    assert abs(st.seconds - expected) < 1e-6

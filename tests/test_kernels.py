@@ -1,0 +1,122 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(assignment requirement), executed in interpret mode on CPU."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.kernels.consmax_attn.ops import consmax_attention_op
+from repro.kernels.consmax_attn.ref import consmax_attention_ref
+from repro.kernels.consmax_lut.ops import consmax_lut_op
+from repro.kernels.consmax_lut.ref import consmax_lut_ref, split_identity_exact
+from repro.kernels.softmax_attn.ops import softmax_attention_op
+from repro.kernels.softmax_attn.ref import softmax_attention_ref
+
+
+def _qkv(key, b, sq, skv, nh, nkv, d, dtype):
+    ks = random.split(key, 3)
+    return (random.normal(ks[0], (b, sq, nh, d)).astype(dtype),
+            random.normal(ks[1], (b, skv, nkv, d)).astype(dtype),
+            random.normal(ks[2], (b, skv, nkv, d)).astype(dtype))
+
+
+SHAPES = [
+    # b, sq, skv, nh, nkv, d, bq, bk
+    (1, 128, 128, 2, 2, 64, 64, 64),
+    (2, 96, 96, 4, 2, 32, 32, 32),     # GQA + non-multiple of block
+    (1, 64, 192, 4, 1, 64, 64, 64),    # cross-length (kv longer), MQA
+    (1, 200, 200, 2, 2, 128, 128, 128),  # padding path
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_consmax_attention_kernel_sweep(shape, dtype):
+    b, sq, skv, nh, nkv, d, bq, bk = shape
+    q, k, v = _qkv(random.key(0), b, sq, skv, nh, nkv, d, dtype)
+    beta = jnp.linspace(0.5, 2.5, nh)
+    gamma = jnp.full((nh,), 100.0)
+    causal = sq == skv
+    out = consmax_attention_op(q, k, v, beta, gamma, causal=causal,
+                               bq=bq, bk=bk)
+    ref = consmax_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                v.swapaxes(1, 2), beta, gamma,
+                                causal=causal).swapaxes(1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_softmax_attention_kernel_sweep(shape, dtype):
+    b, sq, skv, nh, nkv, d, bq, bk = shape
+    q, k, v = _qkv(random.key(1), b, sq, skv, nh, nkv, d, dtype)
+    causal = sq == skv
+    out = softmax_attention_op(q, k, v, causal=causal, bq=bq, bk=bk)
+    ref = softmax_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                v.swapaxes(1, 2),
+                                causal=causal).swapaxes(1, 2)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_kernels_agree_after_merging_softmax_into_consmax():
+    """With beta = logsumexp-row... not possible per-row (that IS the sync);
+    instead: consmax with beta=0, gamma=1 must equal raw exp-scores @ v."""
+    q, k, v = _qkv(random.key(2), 1, 64, 64, 2, 2, 32, jnp.float32)
+    beta = jnp.zeros((2,))
+    gamma = jnp.ones((2,))
+    out = consmax_attention_op(q, k, v, beta, gamma, causal=False,
+                               bq=32, bk=32)
+    import math
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(32)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jnp.exp(s), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_consmax_kernel_sliding_window(window):
+    q, k, v = _qkv(random.key(3), 1, 128, 128, 2, 2, 64, jnp.float32)
+    beta = jnp.ones((2,))
+    gamma = jnp.full((2,), 10.0)
+    out = consmax_attention_op(q, k, v, beta, gamma, causal=True,
+                               window=window, bq=64, bk=64)
+    ref = consmax_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                v.swapaxes(1, 2), beta, gamma, causal=True,
+                                window=window).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_consmax_kernel_merged_vs_training_form():
+    q, k, v = _qkv(random.key(4), 1, 64, 64, 2, 2, 32, jnp.float32)
+    beta = jnp.array([1.0, 2.0])
+    gamma = jnp.array([50.0, 100.0])
+    a = consmax_attention_op(q, k, v, beta, gamma, merged=False, bq=32, bk=32)
+    b_ = consmax_attention_op(q, k, v, beta, gamma, merged=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), rtol=2e-5,
+                               atol=1e-6)
+
+
+# ------------------------------------------------------------------ LUT ----
+def test_lut_all_256_codes_lossless():
+    """The paper's central hardware claim: bitwidth-split LUT product is
+    lossless for every INT8 input (up to fp32 rounding)."""
+    s8 = jnp.arange(-128, 128, dtype=jnp.int8)
+    for scale in (0.03, 1 / np.sqrt(128), 0.125):
+        out = consmax_lut_op(s8, 0.01, scale=float(scale), block=64)
+        ref = consmax_lut_ref(s8, 0.01, float(scale))
+        rel = np.abs(np.asarray(out) - np.asarray(ref)) / np.maximum(
+            np.abs(np.asarray(ref)), 1e-30)
+        assert rel.max() < 1e-5
+        assert split_identity_exact(s8, float(scale)) < 1e-5
+
+
+@pytest.mark.parametrize("n", [7, 128, 1000, 4096])
+def test_lut_shapes(n):
+    s8 = random.randint(random.key(5), (n,), -128, 128).astype(jnp.int8)
+    out = consmax_lut_op(s8, 0.5, scale=0.05, block=256)
+    ref = consmax_lut_ref(s8, 0.5, 0.05)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)

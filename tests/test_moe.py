@@ -1,0 +1,92 @@
+"""MoE dispatch invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import MoEConfig
+from repro.configs.registry import get_config
+from repro.models import moe as M
+from repro.nn.module import Ctx
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    p = M.moe_init(Ctx(random.key(0)), "moe", cfg)
+    x = random.normal(random.key(1), (2, 16, cfg.d_model)).astype(jnp.bfloat16)
+    return cfg, p, x
+
+
+def test_moe_shapes_and_finite(setup):
+    cfg, p, x = setup
+    y, aux = M.moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y.astype(jnp.float32)).any())
+    assert float(aux) >= 0
+
+
+def test_moe_matches_dense_expert_mixture(setup):
+    """With generous capacity (no drops), sort-based dispatch must equal the
+    dense weighted mixture over the top-k experts."""
+    cfg, p, x = setup
+    m = cfg.moe
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    w = w / w.sum(-1, keepdims=True)
+    cdt = jnp.bfloat16
+
+    def expert(e, t):  # t: (d,)
+        h = jax.nn.silu(t @ p["gate"][e].astype(cdt)) * (t @ p["up"][e].astype(cdt))
+        return h @ p["down"][e].astype(cdt)
+
+    def token(t, idxs, ws):
+        outs = jnp.stack([expert(idxs[j], t) for j in range(m.top_k)])
+        return (outs * ws[:, None].astype(cdt)).sum(0)
+
+    dense = jax.vmap(jax.vmap(token))(x.astype(cdt), idx, w)
+    y, _ = M.moe_apply(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(y.astype(jnp.float32)),
+                               np.asarray(dense.astype(jnp.float32)),
+                               atol=3e-2)
+
+
+def test_capacity_drops_tokens():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    tight = MoEConfig(n_experts=4, top_k=2, d_ff_expert=256,
+                      capacity_factor=0.01)
+    cfg_t = cfg.replace(moe=tight)
+    p = M.moe_init(Ctx(random.key(0)), "moe", cfg_t)
+    x = random.normal(random.key(1), (1, 64, cfg.d_model)).astype(jnp.bfloat16)
+    y, _ = M.moe_apply(p, x, cfg_t)
+    # with capacity 8 slots for 128 assignments most tokens are dropped -> 0 rows
+    zeros = (jnp.abs(y.astype(jnp.float32)).sum(-1) == 0).mean()
+    assert float(zeros) > 0.3
+
+
+def test_consmax_router_preserves_topk_selection():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    cs = MoEConfig(n_experts=4, top_k=2, d_ff_expert=256,
+                   router_norm="consmax")
+    cfg_c = cfg.replace(moe=cs)
+    p = M.moe_init(Ctx(random.key(0)), "moe", cfg_c)
+    x = random.normal(random.key(2), (2, 8, cfg.d_model)).astype(jnp.bfloat16)
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    _, idx_sm = jax.lax.top_k(jax.nn.softmax(logits, -1), 2)
+    probs_cs = jnp.exp(logits - p["beta"]) / p["gamma"]
+    _, idx_cs = jax.lax.top_k(probs_cs, 2)
+    np.testing.assert_array_equal(np.asarray(idx_sm), np.asarray(idx_cs))
+
+
+def test_aux_loss_balanced_vs_skewed():
+    cfg = get_config("phi3.5-moe-42b-a6.6b", smoke=True)
+    p = M.moe_init(Ctx(random.key(0)), "moe", cfg)
+    # uniform logits -> aux ~ weight*1.0; skewed router -> larger aux
+    x = random.normal(random.key(3), (2, 32, cfg.d_model)).astype(jnp.bfloat16)
+    _, aux_u = M.moe_apply(p, x, cfg)
+    p_skew = dict(p, router=p["router"] * 0 +
+                  jnp.eye(cfg.d_model, cfg.moe.n_experts) * 50)
+    _, aux_s = M.moe_apply(p_skew, x, cfg)
+    assert float(aux_s) > float(aux_u)

@@ -1,0 +1,113 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax import random
+
+from repro.configs.base import ConSmaxConfig
+from repro.core import consmax as C
+from repro.core import normalizers as N
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.distributed.sharding import make_rules, resolve_spec
+from repro.nn.module import Ctx
+from repro.optim.compression import ef_compress_grads
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ----------------------------------------------------------- consmax ----
+@settings(**SETTINGS)
+@given(st.integers(1, 8), st.integers(1, 16),
+       st.floats(-4, 4), st.floats(0.1, 500))
+def test_consmax_positive_and_monotone(nh, kv, beta, gamma):
+    """ConSmax outputs are positive and strictly increasing in the score —
+    the property that preserves token-relevance ordering (paper Sec. III)."""
+    p = {"beta": jnp.full((nh,), beta), "gamma": jnp.full((nh,), gamma)}
+    s = jnp.linspace(-5, 5, kv)[None, None, None, :].repeat(nh, 1)
+    out = np.asarray(C.consmax(p, s, head_axis=1))
+    assert (out > 0).all()
+    assert (np.diff(out, axis=-1) >= 0).all()
+
+
+@settings(**SETTINGS)
+@given(st.floats(-3, 3), st.floats(0.5, 200), st.floats(-2, 2))
+def test_consmax_shift_is_gamma_rescale(beta, gamma, shift):
+    """exp(s+c-b)/g == e^c * exp(s-b)/g: score shifts rescale uniformly —
+    unlike softmax (invariant), consmax carries magnitude information."""
+    p = {"beta": jnp.array([beta]), "gamma": jnp.array([gamma])}
+    s = jnp.linspace(-2, 2, 7)[None, None, None, :]
+    a = np.asarray(C.consmax(p, s, head_axis=1))
+    b = np.asarray(C.consmax(p, s + shift, head_axis=1))
+    np.testing.assert_allclose(b, a * np.exp(shift), rtol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64))
+def test_softmax_rows_sum_to_one(kv):
+    s = random.normal(random.key(kv), (2, 3, 4, kv))
+    for fn in (N.softmax, N.softermax):
+        out = np.asarray(fn(s))
+        np.testing.assert_allclose(out.sum(-1), 1.0, rtol=1e-4)
+
+
+# ------------------------------------------------- sharding resolver ----
+class _FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 4096), st.integers(1, 4096), st.booleans())
+def test_resolver_divisibility_and_axis_uniqueness(d0, d1, fsdp):
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    rules = make_rules(mesh, fsdp=fsdp)
+    spec = resolve_spec((d0, d1), "embed,mlp", mesh, rules)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    used = []
+    for dim, entry in zip((d0, d1), tuple(spec) + (None,) * 2):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert dim % prod == 0            # divisibility always holds
+        for a in axes:
+            assert a not in used          # no mesh axis used twice
+            used.append(a)
+
+
+@settings(**SETTINGS)
+@given(st.sampled_from([1, 2, 3, 6, 12, 49155, 151936, 65024]))
+def test_resolver_never_errors_on_awkward_dims(dim):
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    rules = make_rules(mesh, fsdp=True)
+    for axes in ("vocab,embed", "embed,heads,", "kv_heads,"):
+        resolve_spec((dim, 32, 8)[:axes.count(",") + 1], axes, mesh, rules)
+
+
+# ------------------------------------------------------ data pipeline ----
+@settings(**SETTINGS)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8]))
+def test_data_deterministic_and_sharded(step, num_shards):
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=8, seed=3)
+    corp = SyntheticCorpus(cfg)
+    a1, _ = corp.batch(step, shard=0, num_shards=num_shards)
+    a2, _ = corp.batch(step, shard=0, num_shards=num_shards)
+    np.testing.assert_array_equal(a1, a2)           # deterministic
+    toks, labels = corp.batch(step)
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])  # shifted
+    assert toks.min() >= 0 and toks.max() < 128
+
+
+# ------------------------------------------------------- compression ----
+@settings(**SETTINGS)
+@given(st.floats(0.01, 100.0))
+def test_ef_compression_error_bounded_and_carried(scale):
+    g = {"w": random.normal(random.key(1), (32, 32)) * scale}
+    ef = {"w": jnp.zeros((32, 32))}
+    deq, ef2 = ef_compress_grads(g, ef)
+    err = np.abs(np.asarray(deq["w"] - g["w"]))
+    assert err.max() <= float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-6
+    np.testing.assert_allclose(np.asarray(ef2["w"]),
+                               np.asarray(g["w"] - deq["w"]), atol=1e-6)

@@ -1,0 +1,93 @@
+"""SSM family: chunked-parallel vs recurrent consistency (mamba, mLSTM,
+sLSTM), chunk-size invariance, and the consmax-stabilizer extension."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import XLSTMConfig
+from repro.configs.registry import get_config
+from repro.models import mamba as MB
+from repro.models import xlstm as XL
+from repro.nn.module import Ctx
+
+
+def test_mamba_prefill_decode_consistency():
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    p = MB.mamba_init(Ctx(random.key(0)), "m", cfg)
+    b, s = 2, 16
+    x = random.normal(random.key(1), (b, s + 2, cfg.d_model)).astype(jnp.bfloat16)
+    y_full, _ = MB.mamba_apply(p, x, cfg)
+    cache = MB.mamba_cache_init(cfg, b)
+    y_pre, cache = MB.mamba_apply(p, x[:, :s], cfg, cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(y_pre.astype(jnp.float32)),
+        np.asarray(y_full[:, :s].astype(jnp.float32)), atol=2e-2)
+    for i in range(2):
+        y_i, cache = MB.mamba_apply(p, x[:, s + i:s + i + 1], cfg, cache=cache)
+        np.testing.assert_allclose(
+            np.asarray(y_i.astype(jnp.float32)),
+            np.asarray(y_full[:, s + i:s + i + 1].astype(jnp.float32)),
+            atol=2e-2)
+
+
+def test_mamba_chunk_invariance():
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    p = MB.mamba_init(Ctx(random.key(0)), "m", cfg)
+    x = random.normal(random.key(2), (1, 32, cfg.d_model)).astype(jnp.bfloat16)
+    y16, _ = MB.mamba_apply(p, x, cfg)
+    cfg8 = cfg.replace(mamba=cfg.mamba.__class__(
+        d_state=cfg.mamba.d_state, d_conv=cfg.mamba.d_conv,
+        expand=cfg.mamba.expand, chunk=8))
+    y8, _ = MB.mamba_apply(p, x, cfg8)
+    np.testing.assert_allclose(np.asarray(y16.astype(jnp.float32)),
+                               np.asarray(y8.astype(jnp.float32)), atol=2e-2)
+
+
+@pytest.mark.parametrize("stab", ["max", "consmax"])
+def test_mlstm_chunk_invariance_and_decode(stab):
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    cfg = cfg.replace(xlstm=XLSTMConfig(chunk=16, stabilizer=stab))
+    p = XL.mlstm_init(Ctx(random.key(0)), "m", cfg)
+    b, s = 2, 16
+    x = random.normal(random.key(3), (b, s + 1, cfg.d_model)).astype(jnp.bfloat16)
+    y_full, _ = XL.mlstm_apply(p, x, cfg)
+    cfg4 = cfg.replace(xlstm=XLSTMConfig(chunk=4, stabilizer=stab))
+    y4, _ = XL.mlstm_apply(p, x, cfg4)
+    np.testing.assert_allclose(np.asarray(y_full.astype(jnp.float32)),
+                               np.asarray(y4.astype(jnp.float32)), atol=3e-2)
+    cache = XL.mlstm_cache_init(cfg, b)
+    _, cache = XL.mlstm_apply(p, x[:, :s], cfg, cache=cache)
+    y1, _ = XL.mlstm_apply(p, x[:, s:s + 1], cfg, cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(y1.astype(jnp.float32)),
+        np.asarray(y_full[:, s:s + 1].astype(jnp.float32)), atol=3e-2)
+
+
+def test_slstm_decode_consistency():
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    p = XL.slstm_init(Ctx(random.key(0)), "s", cfg)
+    b, s = 2, 16
+    x = random.normal(random.key(4), (b, s + 1, cfg.d_model)).astype(jnp.bfloat16)
+    y_full, _ = XL.slstm_apply(p, x, cfg)
+    cache = XL.slstm_cache_init(cfg, b)
+    y_pre, cache = XL.slstm_apply(p, x[:, :s], cfg, cache=cache)
+    np.testing.assert_allclose(np.asarray(y_pre.astype(jnp.float32)),
+                               np.asarray(y_full[:, :s].astype(jnp.float32)),
+                               atol=2e-2)
+    y1, _ = XL.slstm_apply(p, x[:, s:s + 1], cfg, cache=cache)
+    np.testing.assert_allclose(
+        np.asarray(y1.astype(jnp.float32)),
+        np.asarray(y_full[:, s:s + 1].astype(jnp.float32)), atol=2e-2)
+
+
+def test_mlstm_state_bounded_with_consmax_stabilizer():
+    """The learned-constant stabilizer must keep states finite over long
+    rollouts (this is the numerical-safety property the max provides)."""
+    cfg = get_config("xlstm-1.3b", smoke=True)
+    cfg = cfg.replace(xlstm=XLSTMConfig(chunk=16, stabilizer="consmax"))
+    p = XL.mlstm_init(Ctx(random.key(0)), "m", cfg)
+    x = random.normal(random.key(5), (1, 128, cfg.d_model)).astype(jnp.bfloat16)
+    y, _ = XL.mlstm_apply(p, x, cfg)
+    assert not bool(jnp.isnan(y.astype(jnp.float32)).any())
+    assert float(jnp.abs(y.astype(jnp.float32)).max()) < 1e4
