@@ -1,0 +1,143 @@
+"""Decode-path throughput: continuous batching vs the static batch, and the
+split-KV consmax_decode kernel vs the jnp decode row.
+
+Two measurements:
+
+* **engine** — a queue of heterogeneous requests (random prompt lengths and
+  token budgets) served by (a) the static ``ServeSession`` (everyone padded
+  to the longest prompt, decoded for the largest budget — the seed behaviour)
+  and (b) the slot-recycling ``ContinuousBatchingEngine``. Useful-token
+  throughput counts only requested tokens, so static-batch padding waste
+  shows up directly.
+* **step** — wall time of one jitted decode step at a pinned cache length,
+  jnp row attention vs the split-KV Pallas kernel (interpret mode on CPU;
+  the kernel numbers are architecture-mirrors, not CPU speedups).
+
+    PYTHONPATH=src python benchmarks/decode_throughput.py            # quick
+    PYTHONPATH=src python benchmarks/decode_throughput.py --full     # paper axes
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import random
+from jax.tree_util import tree_map_with_path
+
+from benchmarks.common import bench_wall, emit
+from repro.configs.base import ServeConfig
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.nn.module import Ctx
+from repro.serve.engine import (ContinuousBatchingEngine, ServeSession,
+                                make_serve_fns)
+
+
+def _workload(key, n_requests, vocab, max_prompt=24, max_steps=12):
+    """Heterogeneous (prompt, budget) pairs; the spread is the point."""
+    reqs = []
+    for i in range(n_requests):
+        k1, k2, k3 = random.split(random.fold_in(key, i), 3)
+        plen = 1 + int(random.randint(k1, (), 0, max_prompt))
+        steps = 1 + int(random.randint(k2, (), 0, max_steps))
+        prompt = random.randint(k3, (plen,), 0, vocab).tolist()
+        reqs.append((prompt, steps))
+    return reqs
+
+
+def _static_toks_per_s(cfg, params, reqs, max_seq):
+    """Everyone padded to the longest prompt, decoded for the largest budget."""
+    sess = ServeSession(cfg, ServeConfig(max_seq=max_seq), params)
+    plen = max(len(p) for p, _ in reqs)
+    steps = max(s for _, s in reqs)
+    batch = jnp.asarray([p + [0] * (plen - len(p)) for p, _ in reqs],
+                        jnp.int32)
+    sess.generate(batch, steps=steps)                      # compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(sess.generate(batch, steps=steps))
+    dt = time.perf_counter() - t0
+    useful = sum(s for _, s in reqs)
+    return useful / dt
+
+
+def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel):
+    scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
+                       decode_kernel=decode_kernel)
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+
+    def serve():
+        done = len(eng.results)
+        for prompt, steps in reqs:
+            eng.submit(prompt, steps)
+        eng.run()
+        return sum(len(v) for u, v in eng.results.items() if u >= done)
+
+    serve()                                                # compile
+    t0 = time.perf_counter()
+    useful = serve()
+    dt = time.perf_counter() - t0
+    return useful / dt
+
+
+def _pin_index(caches, value):
+    return tree_map_with_path(
+        lambda p, a: jnp.full_like(a, value)
+        if getattr(p[-1], "key", None) == "index" else a, caches)
+
+
+def _step_us(cfg, params, batch, cache_len, decode_kernel):
+    scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel)
+    init_caches, _, decode_step = make_serve_fns(cfg, scfg)
+    caches = _pin_index(init_caches(batch), cache_len - 1)
+    toks = jnp.zeros((batch, 1), jnp.int32)
+    fn = jax.jit(decode_step)
+    return bench_wall(fn, params, caches, {"tokens": toks}, iters=3, warmup=1)
+
+
+def run(arch="qwen2-1.5b", *, full=False, out_dir="artifacts/bench"):
+    cfg = get_config(arch, smoke=True)
+    params = T.lm_init(Ctx(random.key(0)), cfg)
+    rows = []
+
+    # ---- engine: static vs continuous on the same request queue ----
+    batches = (1, 8, 64) if full else (1, 4, 8)
+    for n in batches:
+        reqs = _workload(random.key(7), n, cfg.vocab_size)
+        max_seq = 48
+        slots = min(4, n)
+        st = _static_toks_per_s(cfg, params, reqs, max_seq)
+        co = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, False)
+        ck = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, True)
+        rows.append((f"serve/static_b{n}_tok_s", f"{st:.1f}", "useful_tokens"))
+        rows.append((f"serve/continuous_b{n}_tok_s", f"{co:.1f}",
+                     f"slots={slots}"))
+        rows.append((f"serve/continuous_kernel_b{n}_tok_s", f"{ck:.1f}",
+                     f"slots={slots};split_kv"))
+        rows.append((f"serve/continuous_b{n}_speedup", f"{co/st:.3f}x",
+                     "vs_static_useful"))
+
+    # ---- step: decode latency vs cache length, jnp row vs split-KV ----
+    cache_lens = (1024, 8192, 32768) if full else (1024, 4096)
+    step_batches = (1, 8, 64) if full else (1, 8)
+    for L in cache_lens:
+        for b in step_batches:
+            us_row = _step_us(cfg, params, b, L, False)
+            us_ker = _step_us(cfg, params, b, L, True)
+            rows.append((f"serve/step_L{L}_b{b}_row_us", f"{us_row:.0f}",
+                         f"{1e6*b/us_row:.1f}tok_s"))
+            rows.append((f"serve/step_L{L}_b{b}_splitkv_us", f"{us_ker:.0f}",
+                         f"{1e6*b/us_ker:.1f}tok_s;interpret_on_cpu"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="paper axes: batch 1-64, cache 1k-32k")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.arch, full=args.full)

@@ -8,7 +8,8 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,attn,fig6,fig7,fig8,roofline")
+                    help="comma list: table1,attn,decode,fig6,fig7,fig8,"
+                         "roofline")
     ap.add_argument("--steps", type=int, default=50)
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
@@ -23,6 +24,9 @@ def main() -> None:
     if want("attn"):
         from benchmarks import attn_kernels
         attn_kernels.run()
+    if want("decode"):
+        from benchmarks import decode_throughput
+        decode_throughput.run()
     if want("fig6"):
         from benchmarks import fig6_convergence
         fig6_convergence.run(steps=args.steps)

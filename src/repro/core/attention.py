@@ -197,11 +197,14 @@ def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
 # ----------------------------------------------------------- module api ----
 def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     positions=None, cache=None, cond=None, merged=False,
-                    q_chunk: int = 2048, kv_chunk: int = 1024):
+                    q_chunk: int = 2048, kv_chunk: int = 1024,
+                    decode_kernel: bool = False, decode_kv_block: int = 256):
     """Self- or cross-attention over x: (b, s, d).
 
     cache: None (train/prefill) or dict(k, v, index) for one-token decode.
     cond:  (b, n_cond, d) conditioning stream for cross-attention.
+    decode_kernel: route one-token consmax decode through the split-KV
+    Pallas kernel (kernels/consmax_decode) instead of decode_attention.
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -271,11 +274,22 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
             v_cache = upd(cache["v"], v.astype(cache["v"].dtype), idx)
             k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
             v_cache = shard(v_cache, "act_batch,act_kv_seq,act_kv_heads,")
-            out = decode_attention(q, k_cache.astype(cdt),
-                                   v_cache.astype(cdt), idx,
-                                   norm_kind=cfg.score_norm,
-                                   norm_params=p["score_norm"], window=window,
-                                   softcap=cfg.attn_softcap, merged=merged)
+            if decode_kernel and cfg.score_norm == "consmax":
+                # split-KV Pallas kernel; q is already pre-scaled above
+                from repro.kernels.consmax_decode.ops import consmax_decode_op
+                out = consmax_decode_op(
+                    q, k_cache.astype(cdt), v_cache.astype(cdt), idx,
+                    jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
+                    jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
+                    window=window, softcap=cfg.attn_softcap, merged=merged,
+                    scale=1.0, bk=decode_kv_block)
+            else:
+                out = decode_attention(q, k_cache.astype(cdt),
+                                       v_cache.astype(cdt), idx,
+                                       norm_kind=cfg.score_norm,
+                                       norm_params=p["score_norm"],
+                                       window=window,
+                                       softcap=cfg.attn_softcap, merged=merged)
             new_cache = {"k": k_cache, "v": v_cache, "index": idx + 1}
 
     out = L.heads_out(p["o"], out, dtype=cdt)

@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Compute hot-spot kernels (<name>/kernel.py + ops.py + ref.py per op).
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; this
+container ships the older name. All kernels build their compiler params
+through :func:`tpu_compiler_params` so they run on either version.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    return _CompilerParams(**kwargs)

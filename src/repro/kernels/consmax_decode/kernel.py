@@ -1,0 +1,125 @@
+"""Split-KV ConSmax decode Pallas kernel (TPU target).
+
+Single-query-token attention against a long KV cache, the serving hot path.
+Where the prefill kernel (../consmax_attn) walks KV blocks *sequentially*
+(grid trailing dim 'arbitrary', fp32 accumulator carried across iterations),
+this kernel exploits the paper's sync-free property one step further: with no
+running max and no denominator sum, the partial ``p @ v`` contribution of
+every KV shard is *independent*, so the KV axis of the grid is marked
+``parallel`` like everything else. Each program writes its shard's partial
+into its own output slot and the shards combine by a plain fp32 addition
+outside the kernel — no rescale pass, no (m, l) exchange, no cross-shard
+ordering. This is the decode-time analogue of flash-decoding's split-KV, but
+without the log-sum-exp combine step softmax forces.
+
+Per (batch, kv-head, kv-shard) program:
+
+    s = q @ k^T * scale            (MXU; q is the g-row GQA group)
+    p = exp(s - beta) / gamma      (VPU; masked by per-slot length)
+    o = p @ v                      (MXU; partial, summed across shards later)
+
+GQA is folded into the q rows: the g = n_heads/n_kv_heads query heads that
+share one KV head form the (g, d) left operand, so the score tile is (g, bk)
+— well shaped for the MXU even though a decode step has a single token.
+
+VMEM per program @ (g, bk, d) = (8, 256, 128) fp32: q g·d·4 + k/v 2·bk·d·4 +
+s/p 2·g·bk·4 + out g·d·4 ≈ 0.3 MB — tiny; the Mosaic pipeline double-buffers
+KV shards from HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+
+
+def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
+            scale: float, window: int, softcap: float, bk: int, g: int,
+            merged: bool):
+    ik = pl.program_id(2)
+
+    q = q_ref[0, 0]                                  # (g, d)
+    k = k_ref[0, 0]                                  # (bk, d)
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    n = len_ref[0, 0]                                # valid kv count (<= L)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    mask = kpos < n
+    if window > 0:
+        mask &= (n - 1 - kpos) < window
+
+    beta = beta_ref[0][:, None]                      # (g, 1)
+    gamma = gamma_ref[0][:, None]
+    if merged:
+        p = jnp.exp(-beta) / gamma * jnp.exp(s)      # Eq. 3 (C merged)
+    else:
+        p = jnp.exp(s - beta) / gamma                # Eq. 2
+    p = jnp.where(mask, p, 0.0)
+
+    o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
+                   softcap: float = 0.0, merged: bool = True,
+                   scale: float | None = None, bk: int = 256,
+                   interpret: bool = False):
+    """q: (b, nh, d); k, v: (b, nkv, L, d); lengths: (b,) int32 valid counts;
+    beta/gamma: (nh,) fp32. Returns (b, nh, d) in q.dtype.
+
+    Grid (b, nkv, n_shards) — ALL dims parallel. Shard partials are summed
+    in fp32 by the caller-side reduction below (a pure addition; the absence
+    of a softmax combine step is the point).
+    """
+    b, nh, d = q.shape
+    nkv, L = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    bk = min(bk, L)
+    ns = -(-L // bk)
+    if ns * bk != L:                                 # pad; masked via lengths
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, ns * bk - L), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, ns * bk - L), (0, 0)))
+
+    qg = q.reshape(b, nkv, g, d)
+    beta2 = beta.reshape(nkv, g).astype(jnp.float32)
+    gamma2 = gamma.reshape(nkv, g).astype(jnp.float32)
+    len2 = lengths.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, bk=bk, g=g, merged=merged)
+
+    partials = pl.pallas_call(
+        kernel,
+        grid=(b, nkv, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
+                         memory_space=pltpu.SMEM),                  # lengths
+            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # beta
+            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # gamma
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, ik: (ib, ih, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, g, d),
+                               lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, ns, g, d), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+    )(len2, beta2, gamma2, qg, k, v)
+
+    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    return out.reshape(b, nh, d).astype(q.dtype)

@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the split-KV ConSmax decode kernel.
+
+Adapts the model's decode layout — q (b, 1, H, dk), cache k/v (b, L, hkv, dk),
+per-slot cache ``index`` (b,) — to the kernel's (b, h, seq, d) layout. The
+valid-kv count per slot is ``index + 1`` (the current token's k/v is written
+into the cache before attention). On CPU (this container) the kernel body
+executes in interpret mode; on a real TPU backend it compiles through Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.consmax_decode.kernel import consmax_decode
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
+                                   "bk", "interpret"))
+def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
+                      merged=True, scale=None, bk=256, interpret=None):
+    """q: (b, 1, H, dk); k, v: (b, L, hkv, dk); index: (b,) current position.
+
+    Returns (b, 1, H, dk) in q.dtype. ``scale=1.0`` when q is pre-scaled
+    (the model path); None applies 1/sqrt(dk) (the standalone convention).
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    b, _, H, dk = q.shape
+    qt = q[:, 0]                                     # (b, H, dk)
+    kt = k.swapaxes(1, 2)                            # (b, hkv, L, dk)
+    vt = v.swapaxes(1, 2)
+    out = consmax_decode(qt, kt, vt, index + 1, beta, gamma, window=window,
+                         softcap=softcap, merged=merged, scale=scale, bk=bk,
+                         interpret=interp)
+    return out[:, None]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the split-KV ConSmax decode kernel."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def consmax_decode_ref(q, k, v, lengths, beta, gamma, *, window=0,
+                       softcap=0.0, merged=True, scale=None):
+    """q: (b, nh, d); k, v: (b, nkv, L, d); lengths: (b,). fp32 math."""
+    b, nh, d = q.shape
+    nkv, L = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, nkv, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qf, kf) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(L)[None, :]                    # (1, L)
+    n = lengths.astype(jnp.int32)[:, None]           # (b, 1)
+    mask = kpos < n
+    if window > 0:
+        mask &= (n - 1 - kpos) < window
+    bta = beta.astype(jnp.float32).reshape(nkv, g, 1)
+    gma = gamma.astype(jnp.float32).reshape(nkv, g, 1)
+    if merged:
+        p = jnp.exp(-bta) / gma * jnp.exp(s)
+    else:
+        p = jnp.exp(s - bta) / gma
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    o = jnp.einsum("bhgc,bhcd->bhgd", p, vf)
+    return o.reshape(b, nh, d).astype(q.dtype)

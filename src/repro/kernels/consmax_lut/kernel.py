@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 
 def make_luts(scale: float):
     """(msb_lut, lsb_lut): 16-entry fp32 tables for e^{scale*16*m}, e^{scale*l}."""
@@ -66,7 +68,7 @@ def consmax_lut(scores_int8, c, scale: float, *, block: int = 1024,
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel",)),
     )(jnp.asarray(c, jnp.float32).reshape(1, 1),
       msb_lut.reshape(1, 16), lsb_lut.reshape(1, 16),

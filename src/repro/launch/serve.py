@@ -3,6 +3,12 @@ config on CPU; full config on a real mesh via the same sharding rules the
 dry-run validates).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --steps 16
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --requests 12 --max-slots 4 --decode-kernel
+
+``--engine static`` runs the lockstep ServeSession; ``--engine continuous``
+runs the slot-recycling ContinuousBatchingEngine over a queue of requests
+with heterogeneous prompt/generation lengths.
 """
 from __future__ import annotations
 
@@ -13,10 +19,18 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--engine", choices=("static", "continuous"),
+                    default="static")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # continuous-engine knobs
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--decode-kernel", action="store_true",
+                    help="split-KV consmax decode Pallas kernel")
     args = ap.parse_args()
 
     from jax import random
@@ -25,25 +39,55 @@ def main():
     from repro.configs.registry import get_config
     from repro.models import transformer as T
     from repro.nn.module import Ctx
-    from repro.serve.engine import ServeSession
+    from repro.serve.engine import ContinuousBatchingEngine, ServeSession
 
     cfg = get_config(args.arch, smoke=True)
     if cfg.frontend != "tokens":
         raise SystemExit(f"{args.arch}: embedding-frontend serving demo is "
                          "exercised by the dry-run decode cells")
     params = T.lm_init(Ctx(random.key(0)), cfg)
-    sess = ServeSession(
-        cfg, ServeConfig(max_seq=args.prompt_len + args.steps + 8), params)
-    prompts = random.randint(random.key(1), (args.batch, args.prompt_len),
-                             0, cfg.vocab_size)
+
+    if args.engine == "static":
+        sess = ServeSession(
+            cfg, ServeConfig(max_seq=args.prompt_len + args.steps + 8,
+                             decode_kernel=args.decode_kernel), params)
+        prompts = random.randint(random.key(1),
+                                 (args.batch, args.prompt_len),
+                                 0, cfg.vocab_size)
+        t0 = time.perf_counter()
+        out = sess.generate(prompts, steps=args.steps,
+                            temperature=args.temperature,
+                            key=random.key(2) if args.temperature > 0 else None)
+        dt = time.perf_counter() - t0
+        n = args.batch * args.steps
+        print(f"[serve] {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+        print("[serve] sample:", out[0].tolist())
+        return
+
+    scfg = ServeConfig(max_seq=2 * (args.prompt_len + args.steps) + 8,
+                       prefill_chunk=args.prefill_chunk,
+                       max_slots=args.max_slots,
+                       decode_kernel=args.decode_kernel)
+    eng = ContinuousBatchingEngine(
+        cfg, scfg, params, temperature=args.temperature,
+        key=random.key(2) if args.temperature > 0 else None)
+    rng = random.key(1)
+    uids = []
+    for i in range(args.requests):
+        rng, k1, k2 = random.split(rng, 3)
+        plen = 1 + int(random.randint(k1, (), 0, args.prompt_len))
+        steps = 1 + int(random.randint(k2, (), 0, args.steps))
+        prompt = random.randint(rng, (plen,), 0, cfg.vocab_size).tolist()
+        uids.append(eng.submit(prompt, steps))
     t0 = time.perf_counter()
-    out = sess.generate(prompts, steps=args.steps,
-                        temperature=args.temperature,
-                        key=random.key(2) if args.temperature > 0 else None)
+    results = eng.run()
     dt = time.perf_counter() - t0
-    n = args.batch * args.steps
-    print(f"[serve] {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
-    print("[serve] sample:", out[0].tolist())
+    n = sum(len(v) for v in results.values())
+    print(f"[serve/continuous] {len(results)} requests, {n} tokens in "
+          f"{dt:.2f}s ({n/dt:.1f} tok/s) with {args.max_slots} slots, "
+          f"decode_kernel={args.decode_kernel}")
+    if uids:
+        print("[serve/continuous] sample:", results[uids[0]])
 
 
 if __name__ == "__main__":

@@ -44,11 +44,15 @@ def lm_init(ctx: nn.Ctx, cfg: ModelConfig):
 
 def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              caches=None, positions=None, merged=False, remat="full",
-             q_chunk=2048, kv_chunk=1024, logits_slice=None):
+             q_chunk=2048, kv_chunk=1024, logits_slice=None,
+             logits_index=None, decode_kernel=False, decode_kv_block=256):
     """Forward pass.
 
     tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
     caches: per-super-layer pytree with leading dim n_super (decode), or None.
+    logits_index: traced scalar position — unembed only that row (serving
+    prefill on a padded prompt, where the last real token is mid-sequence).
+    decode_kernel: one-token consmax decode via the split-KV Pallas kernel.
     Returns (logits, new_caches, aux_loss).
     """
     b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
@@ -67,7 +71,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
             ci = cache_in[f"b{i}"] if cache_in is not None else None
             x, co, a = B.block_apply(
                 bp[f"b{i}"], x, cfg, kind, positions=positions, cache=ci,
-                cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk)
+                cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                decode_kernel=decode_kernel, decode_kv_block=decode_kv_block)
             aux = aux + a
             if cache_in is not None:
                 new_caches[f"b{i}"] = co
@@ -94,7 +99,9 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
         aux = jnp.sum(auxs)
 
     x = L.norm_apply(p["final_norm"], x, kind=cfg.norm)
-    if logits_slice is not None:
+    if logits_index is not None:
+        x = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+    elif logits_slice is not None:
         x = x[:, logits_slice]
     logits = L.unembed(p["embed"], x, dtype=cfg.cdtype())
     if cfg.final_softcap > 0:
@@ -130,6 +137,50 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a, (cfg.n_super_layers,) + a.shape).copy(),
         one)
+
+
+# ------------------------------------------------- cache slot utilities ----
+# Continuous batching (serve/engine.py) treats the cache batch dim as a pool
+# of independent slots: each slot holds one request at its own position. The
+# attention caches already carry a per-slot ``index`` vector (b,), so ragged
+# decode needs no padding tricks — masks and rope both read per-slot indices.
+
+def _is_index(path) -> bool:
+    return getattr(path[-1], "key", None) == "index"
+
+
+def cache_index(caches):
+    """Per-slot decode positions: (b,) int32 from the first attention cache's
+    index leaf (all layers agree); None for attention-free archs."""
+    leaves = [v for p, v in
+              jax.tree_util.tree_flatten_with_path(caches)[0] if _is_index(p)]
+    return leaves[0][0] if leaves else None  # strip layer-stack dim
+
+
+def write_slot(caches, slot_caches, slot, length):
+    """Scatter a batch-1 prefilled cache into slot ``slot`` of a batched
+    cache. ``index`` leaves are set to ``length`` — the real prompt length,
+    not the padded prefill length, so decode masking ignores pad rows.
+
+    K/V leaves of ``slot_caches`` may carry a *shorter* seq axis than the
+    slot (a prefill-bucket cache): only that prefix is written. Rows beyond
+    it are either never read (masked by index) or written by decode itself
+    before being read."""
+    def put(path, big, one):
+        if _is_index(path):
+            return big.at[:, slot].set(jnp.asarray(length, big.dtype))
+        one = one[:, 0].astype(big.dtype)            # (n_super, ...)
+        if one.shape == big.shape[:1] + big.shape[2:]:
+            return big.at[:, slot].set(one)
+        return big.at[:, slot, :one.shape[1]].set(one)
+    return jax.tree_util.tree_map_with_path(put, caches, slot_caches)
+
+
+def reset_slot(caches, slot):
+    """Zero slot ``slot`` (index back to 0; k/v and recurrent state rows
+    cleared) so a recycled slot cannot leak a previous request's context."""
+    return jax.tree.map(lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
+                        caches)
 
 
 def cache_axes(cfg: ModelConfig):

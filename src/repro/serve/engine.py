@@ -1,9 +1,22 @@
-"""Serving engine: prefill + decode steps over per-layer caches, batched
-greedy/temperature sampling, and the ``serve_step`` the dry-run lowers for
-``decode_*`` shapes (one new token against a seq_len KV cache).
+"""Serving engines over per-layer KV caches.
+
+Two drivers share the same jitted model steps:
+
+* ``ServeSession`` — static batch: every request prefills and decodes in
+  lockstep, so the batch runs as long as its longest member.
+* ``ContinuousBatchingEngine`` — slot-based continuous batching: a fixed
+  pool of ``max_slots`` cache slots shares ONE compiled decode step; new
+  requests are admitted into free slots from a FIFO queue (bucketed-length
+  prefill, scattered into the slot via ``transformer.write_slot``), decode
+  steps advance all occupied slots at their own per-slot positions (the
+  cache's per-slot ``index`` vector drives both masking and rope), and EOS /
+  token-budget completion recycles the slot for the next queued request.
 
 ConSmax serving uses the merged inference constant C = e^{-beta}/gamma
-(paper Eq. 3) — ``merged=True`` throughout.
+(paper Eq. 3) — ``merged=True`` throughout. With
+``ServeConfig.decode_kernel=True`` the one-token decode path runs the
+split-KV Pallas kernel (kernels/consmax_decode) instead of the jnp row
+attention.
 """
 from __future__ import annotations
 
@@ -11,9 +24,11 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import transformer as T
+from repro.serve.scheduler import Scheduler
 
 
 def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
@@ -35,11 +50,12 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
     def decode_step(params, caches, batch_inputs):
         """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d)."""
         kw = _model_inputs(cfg, batch_inputs)
-        index = _first_index(caches)
+        index = T.cache_index(caches)
         positions = index[:, None] if index is not None else None
         logits, caches, _ = T.lm_apply(
-            params, cfg, caches=caches, merged=True,
-            positions=positions, **kw)
+            params, cfg, caches=caches, merged=True, positions=positions,
+            decode_kernel=scfg.decode_kernel,
+            decode_kv_block=scfg.decode_kv_block, **kw)
         return logits[:, -1], caches
 
     return init_caches, prefill_step, decode_step
@@ -54,22 +70,6 @@ def _model_inputs(cfg: ModelConfig, batch_inputs: dict) -> dict:
     if cfg.cross_attn:
         kw["cond"] = batch_inputs["cond"]
     return kw
-
-
-def _first_index(caches):
-    """Current decode position: the index field of the first attention cache
-    (all layers agree). Attention-free archs (xlstm) use no positions — the
-    recurrence itself encodes order — so None is returned."""
-    leaves = [v for path, v in _iter_paths(caches) if path.endswith("index")]
-    return leaves[0][0] if leaves else None  # strip layer-stack dim
-
-
-def _iter_paths(tree, prefix=""):
-    if isinstance(tree, dict):
-        for k, v in tree.items():
-            yield from _iter_paths(v, f"{prefix}{k}/")
-    else:
-        yield prefix[:-1], tree
 
 
 class ServeSession:
@@ -114,6 +114,145 @@ class ServeSession:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
+
+
+# ----------------------------------------------- continuous batching ----
+def _attention_only(cfg: ModelConfig) -> bool:
+    return all(k in ("attn", "attn_moe", "global", "local")
+               for k in cfg.block_pattern)
+
+
+class ContinuousBatchingEngine:
+    """Slot-recycling serving engine: submit requests, then run().
+
+    Each engine iteration first admits queued requests into free slots (one
+    bucketed prefill call per admission — this is the prefill/decode
+    interleave), then advances every occupied slot with one shared jitted
+    decode step. The decode step always runs all ``max_slots`` rows; free
+    slots compute garbage that is discarded host-side, which keeps the
+    compiled shape static across the whole serve lifetime.
+
+    Prompts are right-padded to a ``prefill_chunk`` multiple so prefill
+    compiles once per bucket, not once per prompt length; causal masking
+    keeps pad rows out of real-token attention, and ``write_slot`` pins the
+    slot's cache index at the *real* length so decode never reads them.
+
+    Restricted to pure-attention token archs: padded prefill would corrupt
+    recurrent (mamba/xlstm) state, and cross-attention needs per-slot cond
+    streams — both stay on the static ``ServeSession`` path.
+    """
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
+                 temperature: float = 0.0, key=None):
+        if cfg.frontend != "tokens":
+            raise NotImplementedError("continuous batching: token frontends")
+        if cfg.cross_attn or not _attention_only(cfg):
+            raise NotImplementedError(
+                "continuous batching requires a pure-attention block pattern "
+                f"(got {cfg.block_pattern}, cross_attn={cfg.cross_attn})")
+        self.cfg, self.scfg = cfg, scfg
+        self.params = params
+        self.temperature, self.key = temperature, key
+        self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq)
+        kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
+        self.caches = T.init_caches(cfg, scfg.max_slots, scfg.max_seq,
+                                    kv_dtype=kv_dtype)
+        self.results: dict[int, list[int]] = {}
+        self._steps = 0
+        self._draws = 0
+
+        def prefill(params, tokens, length):
+            """tokens: (1, bucket_len); length: () real prompt length.
+
+            The cache spans only the prefill bucket (write_slot scatters the
+            prefix into the max_seq slot) and only the row at length-1 is
+            unembedded — both keep admission cost ~bucket-, not max_seq-sized.
+            """
+            s = tokens.shape[1]
+            caches = T.init_caches(cfg, 1, s, kv_dtype=kv_dtype)
+            logits, caches, _ = T.lm_apply(
+                params, cfg, tokens=tokens, caches=caches, merged=True,
+                positions=jnp.arange(s)[None, :], logits_index=length - 1,
+                q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk)
+            return logits[0, 0], caches
+
+        _, _, decode_step = make_serve_fns(cfg, scfg)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode_step)
+        self._write = jax.jit(T.write_slot)
+        self._reset = jax.jit(T.reset_slot)
+
+    # --------------------------------------------------------- frontend ----
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: int | None = None) -> int:
+        """Queue a request; returns its uid (key into results after run)."""
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id)
+
+    def run(self, max_steps: int | None = None) -> dict[int, list[int]]:
+        """Drive admissions + decode until the queue and slots drain.
+        ``max_steps`` bounds this call, not the engine lifetime."""
+        start = self._steps
+        while self.scheduler.has_work():
+            if max_steps is not None and self._steps - start >= max_steps:
+                break
+            self.step()
+        return self.results
+
+    def step(self):
+        """One engine iteration: admit into free slots, then decode once."""
+        admitted = False
+        while (placed := self.scheduler.admit()) is not None:
+            self._admit(*placed)
+            admitted = True
+        if self.scheduler.active():
+            self._decode_once()
+        elif not admitted:
+            return  # nothing queued, nothing active
+        self._steps += 1
+
+    # ---------------------------------------------------------- internals ----
+    def _bucket(self, n: int) -> int:
+        c = self.scfg.prefill_chunk
+        return min(-(-n // c) * c, self.scfg.max_seq)
+
+    def _admit(self, slot: int, req):
+        n = len(req.prompt)
+        padded = req.prompt + [0] * (self._bucket(n) - n)
+        tokens = jnp.asarray(padded, jnp.int32)[None, :]
+        logits, slot_caches = self._prefill(self.params, tokens,
+                                            jnp.asarray(n, jnp.int32))
+        self.caches = self._write(self.caches, slot_caches,
+                                  jnp.asarray(slot, jnp.int32),
+                                  jnp.asarray(n, jnp.int32))
+        tok = int(self._sample(logits[None, :])[0])
+        if self.scheduler.record(slot, tok):
+            self._finish(slot)
+
+    def _decode_once(self):
+        toks = np.zeros((self.scfg.max_slots, 1), np.int32)
+        for slot, state in self.scheduler.active():
+            toks[slot, 0] = state.last_token
+        logits, self.caches = self._decode(self.params, self.caches,
+                                           {"tokens": jnp.asarray(toks)})
+        sampled = np.asarray(self._sample(logits))
+        for slot, _ in self.scheduler.active():
+            if self.scheduler.record(slot, int(sampled[slot])):
+                self._finish(slot)
+
+    def _finish(self, slot: int):
+        uid, generated = self.scheduler.finish(slot)
+        self.results[uid] = generated
+        self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
+
+    def _sample(self, logits):
+        if self.temperature <= 0 or self.key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # per-draw fold: admissions and decode within one engine iteration
+        # must not share a key, or same-prompt slots sample identically
+        self._draws += 1
+        k = jax.random.fold_in(self.key, self._draws)
+        return jax.random.categorical(
+            k, logits / self.temperature).astype(jnp.int32)
 
 
 # --------------------------------------------------- dry-run entry point ----

@@ -1,0 +1,106 @@
+"""Slot-based continuous-batching scheduler (host-side, framework-free).
+
+The decode batch is a fixed pool of ``max_slots`` slots sharing one jitted
+step; requests wait in a FIFO admission queue, occupy a slot for exactly
+prefill + generated-token steps, and are recycled on EOS or token budget —
+so heterogeneous requests never pad each other the way a static batch does.
+
+This module is pure Python bookkeeping: who sits where, what was generated,
+when a slot frees up. All device work (prefill, decode, cache scatter) lives
+in engine.ContinuousBatchingEngine, which drives this scheduler.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int
+    eos_id: int | None = None
+
+
+@dataclass
+class SlotState:
+    request: Request
+    generated: list = field(default_factory=list)
+
+    @property
+    def last_token(self) -> int:
+        return self.generated[-1]
+
+    def done(self) -> bool:
+        r = self.request
+        if r.eos_id is not None and self.generated and (
+                self.generated[-1] == r.eos_id):
+            return True
+        return len(self.generated) >= r.max_new_tokens
+
+
+class Scheduler:
+    """Admission queue + slot table. max_seq bounds prompt + generation so a
+    slot can never overflow its KV-cache rows."""
+
+    def __init__(self, max_slots: int, max_seq: int):
+        self.max_slots = max_slots
+        self.max_seq = max_seq
+        self.queue: deque[Request] = deque()
+        self.slots: list[SlotState | None] = [None] * max_slots
+        self._uids = itertools.count()
+
+    # ------------------------------------------------------- admission ----
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: int | None = None) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_seq ({self.max_seq})")
+        uid = next(self._uids)
+        self.queue.append(Request(uid, prompt, max_new_tokens, eos_id))
+        return uid
+
+    def free_slot(self) -> int | None:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def admit(self) -> tuple[int, Request] | None:
+        """Pop the next queued request into a free slot, if both exist."""
+        slot = self.free_slot()
+        if slot is None or not self.queue:
+            return None
+        req = self.queue.popleft()
+        self.slots[slot] = SlotState(req)
+        return slot, req
+
+    # --------------------------------------------------------- decoding ----
+    def active(self) -> list[tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def record(self, slot: int, token: int) -> bool:
+        """Append a sampled token; True when the request just finished."""
+        state = self.slots[slot]
+        state.generated.append(int(token))
+        return state.done()
+
+    def finish(self, slot: int) -> tuple[int, list[int]]:
+        """Recycle the slot; returns (uid, generated tokens)."""
+        state = self.slots[slot]
+        self.slots[slot] = None
+        return state.request.uid, state.generated
+
+    # ----------------------------------------------------------- status ----
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)

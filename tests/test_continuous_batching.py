@@ -1,0 +1,140 @@
+"""Continuous-batching serving semantics.
+
+* Cache consistency: prefill + N one-token decode steps produce the same
+  logits as one full-sequence forward — with the jnp decode row AND the
+  split-KV decode kernel.
+* Isolation: greedy output per request under continuous batching (slot
+  sharing, admission queue, recycling) is identical to serving that request
+  alone.
+* Slot lifecycle: padded prefill pins the real length; recycled slots leak
+  nothing.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.nn.module import Ctx
+from repro.serve.engine import ContinuousBatchingEngine, ServeSession
+from repro.serve.scheduler import Scheduler
+
+
+def _model(arch="qwen2-1.5b"):
+    cfg = get_config(arch, smoke=True)
+    return cfg, T.lm_init(Ctx(random.key(0)), cfg)
+
+
+# ------------------------------------------------------ cache consistency ----
+@pytest.mark.parametrize("decode_kernel", [False, True])
+def test_prefill_plus_decode_matches_full_forward(decode_kernel):
+    cfg, p = _model()
+    toks = random.randint(random.key(1), (2, 12), 0, cfg.vocab_size)
+    full, _, _ = T.lm_apply(p, cfg, tokens=toks, merged=True,
+                            q_chunk=8, kv_chunk=8)
+    caches = T.init_caches(cfg, 2, 32)
+    _, caches, _ = T.lm_apply(p, cfg, tokens=toks[:, :8], caches=caches,
+                              merged=True, positions=jnp.arange(8)[None, :],
+                              q_chunk=8, kv_chunk=8)
+    for t in range(8, 12):
+        idx = T.cache_index(caches)
+        np.testing.assert_array_equal(np.asarray(idx), t)
+        lg, caches, _ = T.lm_apply(p, cfg, tokens=toks[:, t:t + 1],
+                                   caches=caches, merged=True,
+                                   positions=idx[:, None],
+                                   decode_kernel=decode_kernel,
+                                   decode_kv_block=16)
+        np.testing.assert_allclose(np.asarray(lg[:, -1], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b"])
+def test_decode_kernel_with_window_and_softcap_arch(arch):
+    """gemma2 smoke: local/global pattern, attn softcap — kernel vs row
+    decode must produce identical greedy generations."""
+    cfg, p = _model(arch)
+    prompts = random.randint(random.key(2), (2, 6), 0, cfg.vocab_size)
+    outs = {}
+    for dk in (False, True):
+        sess = ServeSession(cfg, ServeConfig(max_seq=24, decode_kernel=dk,
+                                             decode_kv_block=8), p)
+        outs[dk] = np.asarray(sess.generate(prompts, steps=5))
+    np.testing.assert_array_equal(outs[False], outs[True])
+
+
+# ------------------------------------------------------------- isolation ----
+def test_continuous_batching_matches_serving_alone():
+    cfg, p = _model()
+    scfg = ServeConfig(max_seq=48, prefill_chunk=8, max_slots=3,
+                       decode_kernel=True, decode_kv_block=16)
+    prompts = [list(map(int, random.randint(random.key(i + 10), (n,), 0,
+                                            cfg.vocab_size)))
+               for i, n in enumerate([5, 9, 3, 12, 7])]
+    budgets = [4, 7, 3, 5, 6]
+
+    eng = ContinuousBatchingEngine(cfg, scfg, p)
+    uids = [eng.submit(pr, mx) for pr, mx in zip(prompts, budgets)]
+    results = eng.run(max_steps=200)
+    assert sorted(results) == sorted(uids)          # 5 requests over 3 slots
+
+    alone = ServeSession(cfg, ServeConfig(max_seq=48), p)
+    for uid, pr, mx in zip(uids, prompts, budgets):
+        ref = np.asarray(alone.generate(jnp.asarray([pr], jnp.int32),
+                                        steps=mx))[0]
+        got = np.asarray(results[uid])
+        assert len(got) == mx
+        np.testing.assert_array_equal(got, ref)
+
+
+def test_eos_recycles_slot_and_queue_drains():
+    cfg, p = _model()
+    scfg = ServeConfig(max_seq=32, prefill_chunk=8, max_slots=1)
+    prompt = list(map(int, random.randint(random.key(3), (4,), 0,
+                                          cfg.vocab_size)))
+    probe = ContinuousBatchingEngine(cfg, scfg, p)
+    first = probe.submit(prompt, 1)
+    eos = probe.run(max_steps=50)[first][0]
+
+    eng = ContinuousBatchingEngine(cfg, scfg, p)
+    u1 = eng.submit(prompt, 10, eos_id=eos)         # stops at step 1 via EOS
+    u2 = eng.submit(prompt, 3)                      # waits for the one slot
+    results = eng.run(max_steps=100)
+    assert results[u1] == [eos]
+    assert len(results[u2]) == 3
+    assert results[u2][0] == eos                    # same prompt, same model
+
+
+# ---------------------------------------------------------- slot plumbing ----
+def test_write_slot_pins_real_length_not_padded():
+    cfg, p = _model()
+    big = T.init_caches(cfg, 4, 16)
+    one = T.init_caches(cfg, 1, 16)
+    big = T.write_slot(big, one, 2, 5)
+    idx = np.asarray(T.cache_index(big))
+    np.testing.assert_array_equal(idx, [0, 0, 5, 0])
+
+
+def test_reset_slot_clears_only_that_slot():
+    cfg, p = _model()
+    big = T.init_caches(cfg, 3, 16)
+    big = T.write_slot(big, T.init_caches(cfg, 1, 16), 0, 7)
+    big = T.write_slot(big, T.init_caches(cfg, 1, 16), 1, 9)
+    big = T.reset_slot(big, 1)
+    np.testing.assert_array_equal(np.asarray(T.cache_index(big)), [7, 0, 0])
+
+
+def test_scheduler_rejects_overflow_and_orders_fifo():
+    s = Scheduler(max_slots=2, max_seq=16)
+    with pytest.raises(ValueError):
+        s.submit([1] * 10, 8)                       # 10 + 8 > 16
+    a = s.submit([1, 2], 4)
+    b = s.submit([3], 4)
+    c = s.submit([4], 4)
+    assert [s.admit()[1].uid for _ in range(2)] == [a, b]
+    assert s.admit() is None                        # slots full
+    s.record(0, 99)
+    assert s.finish(0) == (a, [99])
+    assert s.admit()[1].uid == c                    # FIFO after recycle

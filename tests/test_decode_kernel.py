@@ -1,0 +1,126 @@
+"""Split-KV ConSmax decode kernel vs its jnp oracle (interpret mode on CPU):
+GQA, sliding window, softcap, ragged per-slot lengths, non-block-multiple
+cache lengths — and cross-validation against core.attention.decode_attention
+and the prefill kernel's last row."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.core import attention as A
+from repro.core.consmax import consmax_init
+from repro.configs.base import ConSmaxConfig
+from repro.kernels.consmax_decode.ops import consmax_decode_op
+from repro.kernels.consmax_decode.ref import consmax_decode_ref
+from repro.kernels.consmax_attn.ops import consmax_attention_op
+from repro.nn.module import Ctx
+
+
+def _setup(key, b, L, nh, nkv, d, ragged=True):
+    ks = random.split(key, 4)
+    q = random.normal(ks[0], (b, 1, nh, d))
+    k = random.normal(ks[1], (b, L, nkv, d))
+    v = random.normal(ks[2], (b, L, nkv, d))
+    if ragged:
+        index = random.randint(ks[3], (b,), 0, L)
+    else:
+        index = jnp.full((b,), L - 1, jnp.int32)
+    beta = jnp.linspace(0.5, 2.5, nh)
+    gamma = jnp.full((nh,), 100.0)
+    return q, k, v, index, beta, gamma
+
+
+SHAPES = [
+    # b, L, nh, nkv, d, bk      (GQA ratios 1/2/4, MQA, ragged block fits)
+    (2, 128, 4, 4, 64, 64),
+    (3, 96, 8, 2, 32, 32),      # GQA 4:1 + non-block-multiple L
+    (2, 200, 4, 1, 64, 64),     # MQA + non-block-multiple L
+    (1, 64, 2, 2, 128, 256),    # bk > L clamp
+]
+
+
+@pytest.mark.parametrize("merged", [True, False])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_decode_kernel_matches_ref(shape, merged):
+    b, L, nh, nkv, d, bk = shape
+    q, k, v, index, beta, gamma = _setup(random.key(0), b, L, nh, nkv, d)
+    out = consmax_decode_op(q, k, v, index, beta, gamma, merged=merged, bk=bk)
+    ref = consmax_decode_ref(q[:, 0], k.swapaxes(1, 2), v.swapaxes(1, 2),
+                             index + 1, beta, gamma, merged=merged)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [8, 64])
+def test_decode_kernel_sliding_window(window):
+    q, k, v, index, beta, gamma = _setup(random.key(1), 2, 128, 4, 2, 64)
+    out = consmax_decode_op(q, k, v, index, beta, gamma, window=window, bk=32)
+    ref = consmax_decode_ref(q[:, 0], k.swapaxes(1, 2), v.swapaxes(1, 2),
+                             index + 1, beta, gamma, window=window)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_decode_kernel_softcap():
+    q, k, v, index, beta, gamma = _setup(random.key(2), 2, 96, 4, 2, 64)
+    out = consmax_decode_op(q, k, v, index, beta, gamma, softcap=30.0, bk=32)
+    ref = consmax_decode_ref(q[:, 0], k.swapaxes(1, 2), v.swapaxes(1, 2),
+                             index + 1, beta, gamma, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_decode_kernel_matches_decode_attention():
+    """Same math as the jnp decode row used by the model path (pre-scaled q,
+    merged constant) — the two implementations must agree."""
+    b, L, nh, nkv, d = 2, 100, 4, 2, 32
+    q, k, v, index, beta, gamma = _setup(random.key(3), b, L, nh, nkv, d)
+    params = {"beta": beta, "gamma": gamma}
+    qs = q / jnp.sqrt(jnp.float32(d))                    # model pre-scales q
+    row = A.decode_attention(qs, k, v, index, norm_kind="consmax",
+                             norm_params=params, merged=True)
+    ker = consmax_decode_op(qs, k, v, index, beta, gamma, merged=True,
+                            scale=1.0, bk=32)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(row), atol=1e-5)
+
+
+def test_decode_kernel_matches_prefill_kernel_last_row():
+    """Decoding the last position of a full cache equals the prefill
+    kernel's last output row (causal, full lengths)."""
+    b, L, nh, nkv, d = 1, 64, 4, 2, 64
+    ks = random.split(random.key(4), 3)
+    k = random.normal(ks[0], (b, L, nkv, d))
+    v = random.normal(ks[1], (b, L, nkv, d))
+    q_full = random.normal(ks[2], (b, L, nh, d))
+    beta = jnp.linspace(0.5, 2.5, nh)
+    gamma = jnp.full((nh,), 100.0)
+    pre = consmax_attention_op(q_full, k, v, beta, gamma, causal=True,
+                               bq=32, bk=32)
+    dec = consmax_decode_op(q_full[:, -1:], k, v,
+                            jnp.full((b,), L - 1, jnp.int32), beta, gamma,
+                            merged=False, bk=32)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(pre[:, -1]), atol=1e-5)
+
+
+def test_decode_kernel_zero_length_slot():
+    """A slot at index 0 attends only to its own just-written position."""
+    q, k, v, _, beta, gamma = _setup(random.key(5), 2, 32, 4, 2, 32,
+                                     ragged=False)
+    index = jnp.zeros((2,), jnp.int32)
+    out = consmax_decode_op(q, k, v, index, beta, gamma, bk=16)
+    ref = consmax_decode_ref(q[:, 0], k.swapaxes(1, 2), v.swapaxes(1, 2),
+                             jnp.ones((2,), jnp.int32), beta, gamma)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_decode_kernel_bfloat16_io():
+    q, k, v, index, beta, gamma = _setup(random.key(6), 2, 64, 4, 2, 64)
+    out = consmax_decode_op(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                            v.astype(jnp.bfloat16), index, beta, gamma, bk=32)
+    assert out.dtype == jnp.bfloat16
+    ref = consmax_decode_ref(q[:, 0], k.swapaxes(1, 2), v.swapaxes(1, 2),
+                             index + 1, beta, gamma)
+    np.testing.assert_allclose(np.asarray(out[:, 0], np.float32),
+                               np.asarray(ref, np.float32), atol=3e-2)

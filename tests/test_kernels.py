@@ -90,6 +90,21 @@ def test_consmax_kernel_sliding_window(window):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
+@pytest.mark.parametrize("softcap", [10.0, 30.0])
+def test_consmax_kernel_softcap(softcap):
+    """Logit softcapping (gemma2/grok) inside the kernel vs the oracle,
+    under GQA and a non-block-multiple kv length."""
+    q, k, v = _qkv(random.key(6), 2, 96, 96, 4, 2, 64, jnp.float32)
+    beta = jnp.linspace(0.5, 2.5, 4)
+    gamma = jnp.full((4,), 100.0)
+    out = consmax_attention_op(q, k, v, beta, gamma, causal=True,
+                               softcap=softcap, bq=64, bk=64)
+    ref = consmax_attention_ref(q.swapaxes(1, 2), k.swapaxes(1, 2),
+                                v.swapaxes(1, 2), beta, gamma, causal=True,
+                                softcap=softcap).swapaxes(1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
 def test_consmax_kernel_merged_vs_training_form():
     q, k, v = _qkv(random.key(4), 1, 64, 64, 2, 2, 32, jnp.float32)
     beta = jnp.array([1.0, 2.0])
