@@ -48,15 +48,22 @@ def _workload(key, n_requests, vocab, max_prompt=24, max_steps=12):
 
 
 def _static_toks_per_s(cfg, params, reqs, max_seq):
-    """Everyone padded to the longest prompt, decoded for the largest budget."""
+    """Everyone padded to the longest prompt, decoded for the largest budget.
+
+    Prompts are right-padded but prefilled with per-request length masking
+    (``generate(lengths=...)``): pad K/V never enters the cache and each row
+    decodes from its own real position — so the "useful tokens" the baseline
+    is credited with are computed on each request's true context, not on
+    pad-token context."""
     sess = ServeSession(cfg, ServeConfig(max_seq=max_seq), params)
     plen = max(len(p) for p, _ in reqs)
     steps = max(s for _, s in reqs)
     batch = jnp.asarray([p + [0] * (plen - len(p)) for p, _ in reqs],
                         jnp.int32)
-    sess.generate(batch, steps=steps)                      # compile
+    lengths = jnp.asarray([len(p) for p, _ in reqs], jnp.int32)
+    sess.generate(batch, steps=steps, lengths=lengths)     # compile
     t0 = time.perf_counter()
-    jax.block_until_ready(sess.generate(batch, steps=steps))
+    jax.block_until_ready(sess.generate(batch, steps=steps, lengths=lengths))
     dt = time.perf_counter() - t0
     useful = sum(s for _, s in reqs)
     return useful / dt
@@ -89,7 +96,7 @@ def _pin_index(caches, value):
 
 def _step_us(cfg, params, batch, cache_len, decode_kernel):
     scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel)
-    init_caches, _, decode_step = make_serve_fns(cfg, scfg)
+    init_caches, _, decode_step, _ = make_serve_fns(cfg, scfg)
     caches = _pin_index(init_caches(batch), cache_len - 1)
     toks = jnp.zeros((batch, 1), jnp.int32)
     fn = jax.jit(decode_step)

@@ -143,13 +143,16 @@ class TrainConfig:
 class ServeConfig:
     batch: int = 128
     max_seq: int = 32_768
-    prefill_chunk: int = 2048        # prefill length bucket (pads to multiple)
+    prefill_chunk: int = 2048        # append-at-index prefill chunk size:
+                                     # ONE compiled prefill shape (1, chunk)
     kv_cache_dtype: str = "bfloat16"
     seq_shard_kv: bool = False       # shard KV cache along sequence (500k cells)
     q_chunk: int = 2048              # prefill blockwise-attention tiles
     kv_chunk: int = 1024
     # --- continuous batching (serve/scheduler.py + engine.py) ---
     max_slots: int = 8               # concurrent requests in the decode batch
+    prefill_budget: int = 0          # max prefill tokens per engine iteration
+                                     # (0 = one prefill_chunk per iteration)
     decode_kernel: bool = False      # split-KV consmax_decode Pallas kernel
     decode_kv_block: int = 256       # KV shard size for the split-KV kernel
 

@@ -11,6 +11,16 @@ Two execution paths:
   paper's sync-free property expressed at the JAX level (the Pallas kernel in
   ``kernels/consmax_attn`` is the TPU-tiled version of exactly this loop).
 
+* ``append_attention`` — chunked append-at-index prefill. A fixed-size token
+  chunk sitting at per-slot cache position ``index`` attends to
+  ``cache[0:index] + itself``. For consmax there is NO online-softmax rescale
+  state to carry between prefill chunks — each chunk's ``exp(s-beta)/gamma @
+  v`` partial is final — so chunked prefill is literally the blockwise loop
+  restarted per chunk; softmax/softermax keep their (m, l) carry inside one
+  chunk call. The KV walk is a ``fori_loop`` whose trip count is the *actual*
+  fill level, so a chunk near the start of a long cache does not pay for the
+  empty tail.
+
 * ``decode_attention`` — single-token decode against a KV cache. Scores for
   one query row are small even at 512k context, so the row is materialized;
   with a sequence-sharded cache, softmax requires global max+sum collectives
@@ -163,6 +173,113 @@ def blockwise_attention(q, k, v, *, norm_kind: str, norm_params,
     return out.reshape(b, sq, H, dk)
 
 
+# ---------------------------------------------------- append attention ----
+def _append_cache_write(cache, new, index):
+    """Write ``new``: (b, c, hkv, dk) into ``cache``: (b, L, hkv, dk) at
+    per-slot row ``index``: (b,).
+
+    Read-modify-write on a c-row window so the write stays in-bounds even
+    when ``index + c > L`` (a ragged final chunk near the cache end):
+    the window start is clamped to ``L - c`` and the chunk rows are shifted
+    to their true absolute positions; window rows below ``index`` keep the
+    existing (real) cache content. In the common chunk-aligned case the
+    offset is 0 and this reduces to a plain dynamic_update_slice."""
+    L_, c = cache.shape[1], new.shape[1]
+
+    def one(cb, nb, ib):
+        start = jnp.clip(ib, 0, max(L_ - c, 0))
+        off = ib - start
+        win = jax.lax.dynamic_slice_in_dim(cb, start, c, axis=0)
+        rows = jnp.arange(c)
+        new_win = jnp.where((rows >= off)[:, None, None],
+                            jnp.roll(nb, off, axis=0), win)
+        return jax.lax.dynamic_update_slice_in_dim(cb, new_win, start, axis=0)
+
+    return jax.vmap(one)(cache, new.astype(cache.dtype), index)
+
+
+def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
+                     window=0, softcap=0.0, merged=True, kv_chunk=1024):
+    """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
+    k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
+    ``index``; lengths: (b,) real (non-pad) tokens in this chunk.
+
+    Each query row attends causally to cache rows < index + lengths. Rows
+    >= lengths are pad queries: their output is garbage and must be ignored
+    by the caller (their K/V never entered the cache — see attention_apply).
+    The KV loop runs only up to the highest filled chunk, so cost tracks the
+    fill level, not the cache capacity.
+    """
+    b, c, H, dk = q.shape
+    L_, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    kc = min(kv_chunk, L_)
+    n_kv = -(-L_ // kc)
+    pad = n_kv * kc - L_
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, c, hkv, g, dk)
+    qpos = index[:, None] + jnp.arange(c)                    # (b, c)
+    kv_len = index + lengths                                 # (b,)
+    hi = jnp.max(-(-kv_len // kc))                           # dynamic bound
+    cdt = q.dtype
+
+    def chunk_parts(j):
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k_blk,
+                       preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = j * kc + jnp.arange(kc)
+        msk = kpos[None, None, :] < kv_len[:, None, None]    # (b, c, kc)
+        msk &= qpos[:, :, None] >= kpos[None, None, :]
+        if window > 0:
+            msk &= (qpos[:, :, None] - kpos[None, None, :]) < window
+        return s, v_blk, msk
+
+    if norm_kind == "consmax":
+        def body(j, acc):
+            s, v_blk, msk = chunk_parts(j)
+            ps = normalizers.apply_norm(
+                "consmax", norm_params, s.reshape(b, H, c, kc),
+                msk[:, None], head_axis=1, merged=merged
+            ).reshape(b, hkv, g, c, kc)
+            return acc + jnp.einsum("bhgqc,bchd->bqhgd", ps.astype(cdt),
+                                    v_blk, preferred_element_type=jnp.float32)
+        acc = jax.lax.fori_loop(
+            0, hi, body, jnp.zeros((b, c, hkv, g, dk), jnp.float32))
+        return acc.reshape(b, c, H, dk).astype(cdt)
+
+    # online softmax / softermax: the (m, l) carry lives within one chunk
+    base2 = norm_kind == "softermax"
+    expf = jnp.exp2 if base2 else jnp.exp
+
+    def body(j, carry):
+        acc, m, l = carry
+        s, v_blk, msk = chunk_parts(j)
+        msk = msk[:, None, None]                             # (b,1,1,c,kc)
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = expf(m - m_new)
+        e = expf(s - m_new[..., None])
+        e = jnp.where(msk, e, 0.0)
+        l = l * alpha + jnp.sum(e, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", e.astype(cdt), v_blk,
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l
+
+    acc0 = jnp.zeros((b, hkv, g, c, dk), jnp.float32)
+    m0 = jnp.full((b, hkv, g, c), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, c), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, c, H, dk).astype(cdt)
+
+
 # ---------------------------------------------------- decode attention ----
 def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
                      softcap=0.0, merged=True):
@@ -198,13 +315,22 @@ def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
 def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     positions=None, cache=None, cond=None, merged=False,
                     q_chunk: int = 2048, kv_chunk: int = 1024,
-                    decode_kernel: bool = False, decode_kv_block: int = 256):
+                    decode_kernel: bool = False, decode_kv_block: int = 256,
+                    prefill_append=None, decode_active=None):
     """Self- or cross-attention over x: (b, s, d).
 
     cache: None (train/prefill) or dict(k, v, index) for one-token decode.
     cond:  (b, n_cond, d) conditioning stream for cross-attention.
     decode_kernel: route one-token consmax decode through the split-KV
     Pallas kernel (kernels/consmax_decode) instead of decode_attention.
+    prefill_append: (b,) int32 — chunked prefill: x is a fixed-size chunk
+    appended at the cache's per-slot ``index``; the entry gives the real
+    (non-pad) token count per slot. Pad rows' K/V are zeroed before the
+    cache write and ``index`` advances by the real count, so no pad-token
+    K/V ever enters the cache and ragged tails need no pad rows.
+    decode_active: (b,) bool — one-token decode only: slots where False
+    keep their cache row and index untouched (their logits are garbage to
+    be discarded), letting a shared decode step skip prefilling/free slots.
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -227,7 +353,32 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     if rot % 2:
         rot -= 1
 
-    if cache is None or s > 1:
+    if cache is not None and prefill_append is not None and not cross:
+        # chunked append-at-index prefill: x is a (b, c) chunk at per-slot
+        # cache position ``index``; prefill_append holds real chunk lengths
+        idx = cache["index"]                                 # (b,) int32
+        lengths = prefill_append.astype(jnp.int32)
+        if rope_on:
+            pos = idx[:, None] + jnp.arange(s)[None, :]
+            q = R.apply_rope(q, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+            k = R.apply_rope(k, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+        # zero pad rows (>= lengths) so they never enter the cache
+        keep = (jnp.arange(s)[None, :] < lengths[:, None])[..., None, None]
+        k = jnp.where(keep, k, 0).astype(k.dtype)
+        v = jnp.where(keep, v, 0).astype(v.dtype)
+        k_cache = _append_cache_write(cache["k"], k, idx)
+        v_cache = _append_cache_write(cache["v"], v, idx)
+        k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
+        v_cache = shard(v_cache, "act_batch,act_kv_seq,act_kv_heads,")
+        out = append_attention(
+            q, k_cache.astype(cdt), v_cache.astype(cdt), idx, lengths,
+            norm_kind=cfg.score_norm, norm_params=p["score_norm"],
+            window=window, softcap=cfg.attn_softcap, merged=merged,
+            kv_chunk=kv_chunk)
+        new_cache = {"k": k_cache, "v": v_cache, "index": idx + lengths}
+    elif cache is None or s > 1:
         # training, or whole-prompt prefill (cache is filled afterwards)
         if rope_on:
             if positions is None:
@@ -267,9 +418,19 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                                    softcap=cfg.attn_softcap, merged=merged)
         else:
             def upd(c, new, i):
-                return jax.vmap(
-                    lambda cb, nb, ib: jax.lax.dynamic_update_slice_in_dim(
-                        cb, nb, ib, axis=0))(c, new, i)
+                if decode_active is None:
+                    return jax.vmap(
+                        lambda cb, nb, ib: jax.lax.dynamic_update_slice_in_dim(
+                            cb, nb, ib, axis=0))(c, new, i)
+
+                # inactive slots keep their row: prefilling/free slots in a
+                # shared decode batch must not absorb garbage K/V
+                def one(cb, nb, ib, ab):
+                    old = jax.lax.dynamic_slice_in_dim(
+                        cb, ib, nb.shape[0], axis=0)
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        cb, jnp.where(ab, nb, old), ib, axis=0)
+                return jax.vmap(one)(c, new, i, decode_active)
             k_cache = upd(cache["k"], k.astype(cache["k"].dtype), idx)
             v_cache = upd(cache["v"], v.astype(cache["v"].dtype), idx)
             k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
@@ -290,7 +451,9 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                                        norm_params=p["score_norm"],
                                        window=window,
                                        softcap=cfg.attn_softcap, merged=merged)
-            new_cache = {"k": k_cache, "v": v_cache, "index": idx + 1}
+            step = (1 if decode_active is None
+                    else decode_active.astype(idx.dtype))
+            new_cache = {"k": k_cache, "v": v_cache, "index": idx + step}
 
     out = L.heads_out(p["o"], out, dtype=cdt)
     out = shard(out, "act_batch,act_seq,act_embed")

@@ -8,7 +8,14 @@ dry-run validates).
 
 ``--engine static`` runs the lockstep ServeSession; ``--engine continuous``
 runs the slot-recycling ContinuousBatchingEngine over a queue of requests
-with heterogeneous prompt/generation lengths.
+with heterogeneous prompt/generation lengths — prompts enter the KV cache
+in fixed ``--prefill-chunk`` appends at the slot index (one compiled prefill
+shape for the whole run), with at most ``--prefill-budget`` prefill tokens
+per engine iteration so long prompts cannot stall decode.
+
+``--decode-kernel`` requires a consmax arch; requesting it on a softmax/
+softermax config raises at construction instead of silently serving the
+jnp row path.
 """
 from __future__ import annotations
 
@@ -28,9 +35,14 @@ def main():
     # continuous-engine knobs
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-slots", type=int, default=4)
-    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="append-at-index prefill chunk (ONE compiled shape)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="max prefill tokens per engine iteration "
+                         "(0 = one chunk)")
     ap.add_argument("--decode-kernel", action="store_true",
-                    help="split-KV consmax decode Pallas kernel")
+                    help="split-KV consmax decode Pallas kernel "
+                         "(consmax archs only; errors otherwise)")
     args = ap.parse_args()
 
     from jax import random
@@ -66,6 +78,7 @@ def main():
 
     scfg = ServeConfig(max_seq=2 * (args.prompt_len + args.steps) + 8,
                        prefill_chunk=args.prefill_chunk,
+                       prefill_budget=args.prefill_budget,
                        max_slots=args.max_slots,
                        decode_kernel=args.decode_kernel)
     eng = ContinuousBatchingEngine(

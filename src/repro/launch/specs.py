@@ -210,7 +210,7 @@ def make_cell(arch_id: str, shape_name: str, mesh, *,
     # ---- serving cells ----
     serve_step, scfg = SE.make_decode_for_dryrun(cfg, seq_len)
     if kind == "prefill":
-        _, prefill_step, _ = SE.make_serve_fns(cfg, scfg)
+        _, prefill_step, _, _ = SE.make_serve_fns(cfg, scfg)
         step = prefill_step
         tokens_per_call = global_batch * seq_len
     else:

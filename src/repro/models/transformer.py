@@ -45,19 +45,30 @@ def lm_init(ctx: nn.Ctx, cfg: ModelConfig):
 def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              caches=None, positions=None, merged=False, remat="full",
              q_chunk=2048, kv_chunk=1024, logits_slice=None,
-             logits_index=None, decode_kernel=False, decode_kv_block=256):
+             logits_index=None, decode_kernel=False, decode_kv_block=256,
+             prefill_append=None, decode_active=None):
     """Forward pass.
 
     tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
     caches: per-super-layer pytree with leading dim n_super (decode), or None.
-    logits_index: traced scalar position — unembed only that row (serving
-    prefill on a padded prompt, where the last real token is mid-sequence).
+    logits_index: traced position — unembed only that row (serving prefill on
+    a padded prompt, where the last real token is mid-sequence). A scalar
+    selects one row for the whole batch; a (b,) array gathers per-batch rows
+    (ragged prompts prefilled together).
     decode_kernel: one-token consmax decode via the split-KV Pallas kernel.
+    prefill_append: (b,) int32 real chunk lengths — chunked append-at-index
+    prefill: tokens is a fixed-size chunk written into each attention cache
+    at its per-slot ``index`` (which then advances by the real length).
+    decode_active: (b,) bool — one-token decode: slots where False keep
+    cache rows and index untouched (shared decode step over a slot pool).
     Returns (logits, new_caches, aux_loss).
     """
     b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
     if positions is None and caches is None:
         positions = jnp.arange(s)[None, :]
+    elif positions is None and prefill_append is not None:
+        idx = cache_index(caches)                      # per-slot fill level
+        positions = idx[:, None] + jnp.arange(s)[None, :]
     # decode: caller passes positions (= cache index) for rope/sinusoidal
 
     x = F.frontend_apply(p, cfg, tokens=tokens, embeds=embeds,
@@ -72,7 +83,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
             x, co, a = B.block_apply(
                 bp[f"b{i}"], x, cfg, kind, positions=positions, cache=ci,
                 cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk,
-                decode_kernel=decode_kernel, decode_kv_block=decode_kv_block)
+                decode_kernel=decode_kernel, decode_kv_block=decode_kv_block,
+                prefill_append=prefill_append, decode_active=decode_active)
             aux = aux + a
             if cache_in is not None:
                 new_caches[f"b{i}"] = co
@@ -100,7 +112,11 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
 
     x = L.norm_apply(p["final_norm"], x, kind=cfg.norm)
     if logits_index is not None:
-        x = jax.lax.dynamic_slice_in_dim(x, logits_index, 1, axis=1)
+        li = jnp.asarray(logits_index)
+        if li.ndim == 0:
+            x = jax.lax.dynamic_slice_in_dim(x, li, 1, axis=1)
+        else:                                  # (b,) per-batch row gather
+            x = jnp.take_along_axis(x, li[:, None, None], axis=1)
     elif logits_slice is not None:
         x = x[:, logits_slice]
     logits = L.unembed(p["embed"], x, dtype=cfg.cdtype())
@@ -163,13 +179,18 @@ def write_slot(caches, slot_caches, slot, length):
     not the padded prefill length, so decode masking ignores pad rows.
 
     K/V leaves of ``slot_caches`` may carry a *shorter* seq axis than the
-    slot (a prefill-bucket cache): only that prefix is written. Rows beyond
-    it are either never read (masked by index) or written by decode itself
-    before being read."""
+    slot (a prefill-bucket cache): only that prefix is written, and rows
+    ``>= length`` are zeroed on the way in — a padded prefill computes
+    pad-token K/V for those rows, and copying it would leave garbage keys
+    in the slot (masked today, a live hazard for anything that later reads
+    rows above ``index``, e.g. an append-at-index prefill chunk)."""
     def put(path, big, one):
         if _is_index(path):
             return big.at[:, slot].set(jnp.asarray(length, big.dtype))
         one = one[:, 0].astype(big.dtype)            # (n_super, ...)
+        if getattr(path[-1], "key", None) in ("k", "v"):
+            keep = jnp.arange(one.shape[1]) < length
+            one = jnp.where(keep[None, :, None, None], one, 0)
         if one.shape == big.shape[:1] + big.shape[2:]:
             return big.at[:, slot].set(one)
         return big.at[:, slot, :one.shape[1]].set(one)

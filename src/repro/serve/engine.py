@@ -3,24 +3,32 @@
 Two drivers share the same jitted model steps:
 
 * ``ServeSession`` — static batch: every request prefills and decodes in
-  lockstep, so the batch runs as long as its longest member.
+  lockstep, so the batch runs as long as its longest member. Ragged prompt
+  batches are supported via ``generate(..., lengths=...)``: the batch is
+  prefilled with per-request masking (pad K/V zeroed, per-slot index pinned
+  at the real length), so shorter requests' outputs are not corrupted by
+  pad context.
 * ``ContinuousBatchingEngine`` — slot-based continuous batching: a fixed
   pool of ``max_slots`` cache slots shares ONE compiled decode step; new
-  requests are admitted into free slots from a FIFO queue (bucketed-length
-  prefill, scattered into the slot via ``transformer.write_slot``), decode
-  steps advance all occupied slots at their own per-slot positions (the
-  cache's per-slot ``index`` vector drives both masking and rope), and EOS /
+  requests are admitted into free slots from a FIFO queue and prefilled in
+  fixed-size chunks appended directly at the slot's cache index (one
+  compiled prefill shape ``(1, prefill_chunk)`` for the engine's whole
+  lifetime — no per-bucket recompiles, no pad-token K/V in any slot row),
+  decode steps advance all DECODING slots at their own per-slot positions
+  (the cache's per-slot ``index`` vector drives masking and rope; an
+  ``active`` mask keeps PREFILLING/free slots' rows untouched), and EOS /
   token-budget completion recycles the slot for the next queued request.
 
 ConSmax serving uses the merged inference constant C = e^{-beta}/gamma
-(paper Eq. 3) — ``merged=True`` throughout. With
+(paper Eq. 3) — ``merged=True`` throughout. ConSmax's sync-free
+normalization is what makes the chunked prefill this simple: chunks
+contribute independent ``exp(s-beta)/gamma @ v`` partials, so there is no
+online-softmax rescale state to thread between admission chunks. With
 ``ServeConfig.decode_kernel=True`` the one-token decode path runs the
 split-KV Pallas kernel (kernels/consmax_decode) instead of the jnp row
-attention.
+attention (consmax archs only — anything else raises at construction).
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +40,13 @@ from repro.serve.scheduler import Scheduler
 
 
 def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
+    """Returns (init_caches, prefill_step, decode_step, prefill_ragged)."""
+    if scfg.decode_kernel and cfg.score_norm != "consmax":
+        raise ValueError(
+            "ServeConfig.decode_kernel=True requires score_norm='consmax' "
+            f"(got {cfg.score_norm!r} for {cfg.arch_id}): the split-KV "
+            "decode kernel has no softmax/softermax path. Drop "
+            "--decode-kernel or serve a consmax arch.")
     kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
 
     def init_caches(batch: int):
@@ -47,18 +62,32 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
         return logits[:, -1], caches
 
+    def prefill_ragged(params, caches, batch_inputs, lengths):
+        """Right-padded ragged batch prefill via the append-at-index path:
+        pad K/V never enters the cache, each slot's index lands on its real
+        length, and logits are gathered per-request at ``lengths - 1``."""
+        kw = _model_inputs(cfg, batch_inputs)
+        logits, caches, _ = T.lm_apply(
+            params, cfg, caches=caches, merged=True,
+            prefill_append=lengths, logits_index=lengths - 1,
+            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
+        return logits[:, 0], caches
+
     def decode_step(params, caches, batch_inputs):
-        """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d)."""
+        """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d),
+        plus optional ``active`` (b,) bool — slots where False keep cache
+        row and index untouched (their logits are garbage to discard)."""
         kw = _model_inputs(cfg, batch_inputs)
         index = T.cache_index(caches)
         positions = index[:, None] if index is not None else None
         logits, caches, _ = T.lm_apply(
             params, cfg, caches=caches, merged=True, positions=positions,
             decode_kernel=scfg.decode_kernel,
-            decode_kv_block=scfg.decode_kv_block, **kw)
+            decode_kv_block=scfg.decode_kv_block,
+            decode_active=batch_inputs.get("active"), **kw)
         return logits[:, -1], caches
 
-    return init_caches, prefill_step, decode_step
+    return init_caches, prefill_step, decode_step, prefill_ragged
 
 
 def _model_inputs(cfg: ModelConfig, batch_inputs: dict) -> dict:
@@ -79,16 +108,22 @@ class ServeSession:
                  positions_fallback: bool = False):
         self.cfg, self.scfg = cfg, scfg
         self.params = params
-        ic, pf, dc = make_serve_fns(cfg, scfg)
+        ic, pf, dc, pr = make_serve_fns(cfg, scfg)
         self._init_caches = ic
         self._prefill = jax.jit(pf)
+        self._prefill_ragged = jax.jit(pr)
         self._decode = jax.jit(dc)
         self._pos = None  # fallback position counter for SSM-only archs
         self._positions_fallback = positions_fallback
 
     def generate(self, prompts: jnp.ndarray, *, steps: int,
-                 temperature: float = 0.0, key=None, cond=None):
-        """prompts: (b, s) int tokens (token frontend). Returns (b, steps)."""
+                 temperature: float = 0.0, key=None, cond=None,
+                 lengths=None):
+        """prompts: (b, s) int tokens (token frontend). Returns (b, steps).
+
+        lengths: optional (b,) real prompt lengths for a right-padded ragged
+        batch — prefill masks pad rows and each row decodes from its own
+        position, so row r's output equals serving prompt r alone."""
         b, s = prompts.shape
         caches = self._init_caches(b)
         inputs = {"tokens": prompts}
@@ -96,7 +131,18 @@ class ServeSession:
             inputs["cond"] = cond
         if self.cfg.frontend != "tokens":
             raise NotImplementedError("embedding-frontend generation")
-        logits, caches = self._prefill(self.params, caches, inputs)
+        if lengths is None:
+            logits, caches = self._prefill(self.params, caches, inputs)
+        else:
+            if not _attention_only(self.cfg):
+                # prefill_append masks pad rows in attention KV caches only;
+                # recurrent (mamba/xlstm) state would scan the pad tokens
+                raise NotImplementedError(
+                    "ragged generate(lengths=...) requires a pure-attention "
+                    f"block pattern (got {self.cfg.block_pattern})")
+            logits, caches = self._prefill_ragged(
+                self.params, caches, inputs,
+                jnp.asarray(lengths, jnp.int32))
         outs = []
         tok = self._sample(logits, temperature, key, 0)
         for i in range(steps):
@@ -125,21 +171,26 @@ def _attention_only(cfg: ModelConfig) -> bool:
 class ContinuousBatchingEngine:
     """Slot-recycling serving engine: submit requests, then run().
 
-    Each engine iteration first admits queued requests into free slots (one
-    bucketed prefill call per admission — this is the prefill/decode
-    interleave), then advances every occupied slot with one shared jitted
-    decode step. The decode step always runs all ``max_slots`` rows; free
-    slots compute garbage that is discarded host-side, which keeps the
-    compiled shape static across the whole serve lifetime.
+    Each engine iteration (a) admits queued requests into free slots, (b)
+    runs at most one append-at-index prefill chunk per PREFILLING slot —
+    bounded by ``ServeConfig.prefill_budget`` tokens per iteration — and
+    (c) advances every DECODING slot with one shared jitted decode step.
+    The decode step always runs all ``max_slots`` rows with an ``active``
+    mask; inactive rows (free or still prefilling) compute garbage logits
+    that are discarded host-side while their cache rows and index stay
+    untouched, which keeps the compiled shape static across the whole serve
+    lifetime.
 
-    Prompts are right-padded to a ``prefill_chunk`` multiple so prefill
-    compiles once per bucket, not once per prompt length; causal masking
-    keeps pad rows out of real-token attention, and ``write_slot`` pins the
-    slot's cache index at the *real* length so decode never reads them.
+    Prefill appends directly at the slot's cache index in fixed-size
+    ``prefill_chunk`` token chunks: K/V land at rows [index, index+n), pad
+    rows of a ragged final chunk are zeroed before the write, and the index
+    advances by the real chunk length. One prefill shape
+    ``(1, prefill_chunk)`` is compiled for the engine's entire lifetime —
+    admission never recompiles, and no pad-token K/V ever enters a slot.
 
-    Restricted to pure-attention token archs: padded prefill would corrupt
-    recurrent (mamba/xlstm) state, and cross-attention needs per-slot cond
-    streams — both stay on the static ``ServeSession`` path.
+    Restricted to pure-attention token archs: chunked prefill appends into
+    attention KV caches; recurrent (mamba/xlstm) state and cross-attention
+    cond streams stay on the static ``ServeSession`` path.
     """
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
@@ -160,27 +211,36 @@ class ContinuousBatchingEngine:
         self.results: dict[int, list[int]] = {}
         self._steps = 0
         self._draws = 0
+        self._chunk = min(scfg.prefill_chunk, scfg.max_seq)
+        self._budget = scfg.prefill_budget or self._chunk
 
-        def prefill(params, tokens, length):
-            """tokens: (1, bucket_len); length: () real prompt length.
-
-            The cache spans only the prefill bucket (write_slot scatters the
-            prefix into the max_seq slot) and only the row at length-1 is
-            unembedded — both keep admission cost ~bucket-, not max_seq-sized.
-            """
-            s = tokens.shape[1]
-            caches = T.init_caches(cfg, 1, s, kv_dtype=kv_dtype)
-            logits, caches, _ = T.lm_apply(
-                params, cfg, tokens=tokens, caches=caches, merged=True,
-                positions=jnp.arange(s)[None, :], logits_index=length - 1,
+        def prefill_chunk_step(params, caches, slot, tokens, lengths):
+            """One append chunk for one slot. tokens: (1, chunk) with rows
+            >= lengths[0] as pad; slot, lengths traced, so this compiles
+            exactly once. The slot's caches are sliced out of the pool,
+            appended at their index, and written back; logits are the row
+            at lengths-1 (only meaningful for a prompt's final chunk)."""
+            slot_caches = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
+                caches)
+            logits, slot_caches, _ = T.lm_apply(
+                params, cfg, tokens=tokens, caches=slot_caches, merged=True,
+                prefill_append=lengths, logits_index=lengths[0] - 1,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk)
-            return logits[0, 0], caches
+            caches = jax.tree.map(
+                lambda big, one: jax.lax.dynamic_update_slice_in_dim(
+                    big, one.astype(big.dtype), slot, axis=1),
+                caches, slot_caches)
+            return logits[:, 0], caches
 
-        _, _, decode_step = make_serve_fns(cfg, scfg)
-        self._prefill = jax.jit(prefill)
-        self._decode = jax.jit(decode_step)
-        self._write = jax.jit(T.write_slot)
-        self._reset = jax.jit(T.reset_slot)
+        _, _, decode_step, _ = make_serve_fns(cfg, scfg)
+        # the engine rebinds self.caches to each result immediately, so the
+        # cache pool buffer is donated — prefill/decode/reset update the
+        # n_layers x max_slots x max_seq K/V pool in place instead of
+        # copying it per call (donation is a no-op on CPU smoke runs)
+        self._prefill = jax.jit(prefill_chunk_step, donate_argnums=(1,))
+        self._decode = jax.jit(decode_step, donate_argnums=(1,))
+        self._reset = jax.jit(T.reset_slot, donate_argnums=(0,))
 
     # --------------------------------------------------------- frontend ----
     def submit(self, prompt, max_new_tokens: int,
@@ -199,43 +259,50 @@ class ContinuousBatchingEngine:
         return self.results
 
     def step(self):
-        """One engine iteration: admit into free slots, then decode once."""
-        admitted = False
-        while (placed := self.scheduler.admit()) is not None:
-            self._admit(*placed)
-            admitted = True
-        if self.scheduler.active():
+        """One engine iteration: admit, prefill up to the token budget,
+        then one shared decode step for the DECODING slots."""
+        while self.scheduler.admit() is not None:
+            pass
+        plan = self.scheduler.prefill_plan(self._chunk, self._budget)
+        for slot, start, n in plan:
+            self._prefill_one(slot, start, n)
+        if self.scheduler.decoding():
             self._decode_once()
-        elif not admitted:
+        elif not plan:
             return  # nothing queued, nothing active
         self._steps += 1
 
-    # ---------------------------------------------------------- internals ----
-    def _bucket(self, n: int) -> int:
-        c = self.scfg.prefill_chunk
-        return min(-(-n // c) * c, self.scfg.max_seq)
+    @property
+    def prefill_cache_size(self) -> int:
+        """Compiled prefill variants so far (1 for the whole lifetime —
+        the append-at-index design's no-recompile guarantee)."""
+        return self._prefill._cache_size()
 
-    def _admit(self, slot: int, req):
-        n = len(req.prompt)
-        padded = req.prompt + [0] * (self._bucket(n) - n)
-        tokens = jnp.asarray(padded, jnp.int32)[None, :]
-        logits, slot_caches = self._prefill(self.params, tokens,
-                                            jnp.asarray(n, jnp.int32))
-        self.caches = self._write(self.caches, slot_caches,
-                                  jnp.asarray(slot, jnp.int32),
-                                  jnp.asarray(n, jnp.int32))
-        tok = int(self._sample(logits[None, :])[0])
-        if self.scheduler.record(slot, tok):
-            self._finish(slot)
+    # ---------------------------------------------------------- internals ----
+    def _prefill_one(self, slot: int, start: int, n: int):
+        prompt = self.scheduler.slots[slot].request.prompt
+        chunk = prompt[start:start + n] + [0] * (self._chunk - n)
+        logits, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(chunk, jnp.int32)[None, :],
+            jnp.asarray([n], jnp.int32))
+        if self.scheduler.record_prefill(slot, n):
+            # prompt complete: sample the first output token
+            tok = int(self._sample(logits)[0])
+            if self.scheduler.record(slot, tok):
+                self._finish(slot)
 
     def _decode_once(self):
         toks = np.zeros((self.scfg.max_slots, 1), np.int32)
-        for slot, state in self.scheduler.active():
+        active = np.zeros((self.scfg.max_slots,), bool)
+        for slot, state in self.scheduler.decoding():
             toks[slot, 0] = state.last_token
-        logits, self.caches = self._decode(self.params, self.caches,
-                                           {"tokens": jnp.asarray(toks)})
+            active[slot] = True
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            {"tokens": jnp.asarray(toks), "active": jnp.asarray(active)})
         sampled = np.asarray(self._sample(logits))
-        for slot, _ in self.scheduler.active():
+        for slot, _ in self.scheduler.decoding():
             if self.scheduler.record(slot, int(sampled[slot])):
                 self._finish(slot)
 
@@ -247,8 +314,9 @@ class ContinuousBatchingEngine:
     def _sample(self, logits):
         if self.temperature <= 0 or self.key is None:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # per-draw fold: admissions and decode within one engine iteration
-        # must not share a key, or same-prompt slots sample identically
+        # per-draw fold: prefill completions and decode within one engine
+        # iteration must not share a key, or same-prompt slots sample
+        # identically
         self._draws += 1
         k = jax.random.fold_in(self.key, self._draws)
         return jax.random.categorical(
@@ -260,7 +328,7 @@ def make_decode_for_dryrun(cfg: ModelConfig, seq_len: int):
     """serve_step(params, caches, tokens) with the cache index pinned at
     seq_len-1 — the decode_32k / long_500k cell semantics."""
     scfg = ServeConfig(max_seq=seq_len)
-    _, _, decode_step = make_serve_fns(cfg, scfg)
+    _, _, decode_step, _ = make_serve_fns(cfg, scfg)
 
     def serve_step(params, caches, batch_inputs):
         return decode_step(params, caches, batch_inputs)

@@ -5,15 +5,31 @@ step; requests wait in a FIFO admission queue, occupy a slot for exactly
 prefill + generated-token steps, and are recycled on EOS or token budget —
 so heterogeneous requests never pad each other the way a static batch does.
 
+Each occupied slot is a two-state machine:
+
+* ``PREFILLING`` — the prompt enters the KV cache in fixed-size append
+  chunks, at most one chunk per slot per engine iteration, with the total
+  prefill tokens per iteration capped by a budget (``prefill_plan``). Long
+  prompts therefore never stall the decode step for more than one chunk.
+* ``DECODING``  — the slot advances one token per shared decode step.
+
+The transition happens when ``record_prefill`` accounts the final prompt
+token; the engine then samples the first output token from the last chunk's
+logits and the slot joins the decode batch.
+
 This module is pure Python bookkeeping: who sits where, what was generated,
-when a slot frees up. All device work (prefill, decode, cache scatter) lives
-in engine.ContinuousBatchingEngine, which drives this scheduler.
+when a slot frees up. All device work (chunked prefill, decode, cache
+updates) lives in engine.ContinuousBatchingEngine, which drives this
+scheduler.
 """
 from __future__ import annotations
 
 import itertools
 from collections import deque
 from dataclasses import dataclass, field
+
+PREFILLING = "prefilling"
+DECODING = "decoding"
 
 
 @dataclass
@@ -28,6 +44,8 @@ class Request:
 class SlotState:
     request: Request
     generated: list = field(default_factory=list)
+    filled: int = 0                       # prompt tokens prefilled so far
+    phase: str = PREFILLING
 
     @property
     def last_token(self) -> int:
@@ -73,7 +91,8 @@ class Scheduler:
         return None
 
     def admit(self) -> tuple[int, Request] | None:
-        """Pop the next queued request into a free slot, if both exist."""
+        """Pop the next queued request into a free slot (PREFILLING state),
+        if both exist."""
         slot = self.free_slot()
         if slot is None or not self.queue:
             return None
@@ -81,9 +100,53 @@ class Scheduler:
         self.slots[slot] = SlotState(req)
         return slot, req
 
+    # --------------------------------------------------------- prefill ----
+    def prefilling(self) -> list[tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots)
+                if s is not None and s.phase == PREFILLING]
+
+    def prefill_plan(self, chunk: int,
+                     budget: int) -> list[tuple[int, int, int]]:
+        """Chunks to prefill this iteration: (slot, start, n) triples.
+
+        At most one chunk (``n <= chunk`` tokens) per PREFILLING slot, total
+        real tokens capped by ``budget`` — except that the first planned
+        chunk always runs, so a budget below the chunk size cannot starve
+        prefill forever."""
+        plan: list[tuple[int, int, int]] = []
+        used = 0
+        for i, s in self.prefilling():
+            if plan and used >= budget:
+                break
+            n = min(chunk, len(s.request.prompt) - s.filled)
+            plan.append((i, s.filled, n))
+            used += n
+        return plan
+
+    def record_prefill(self, slot: int, n: int) -> bool:
+        """Account ``n`` prefilled prompt tokens; True when the prompt just
+        completed (slot moves to DECODING and the engine must sample the
+        first output token from this chunk's logits)."""
+        s = self.slots[slot]
+        if s.phase != PREFILLING:
+            raise ValueError(f"slot {slot} is not prefilling")
+        s.filled += n
+        if s.filled > len(s.request.prompt):
+            raise ValueError(
+                f"slot {slot} overfilled: {s.filled} > "
+                f"{len(s.request.prompt)} prompt tokens")
+        if s.filled == len(s.request.prompt):
+            s.phase = DECODING
+            return True
+        return False
+
     # --------------------------------------------------------- decoding ----
     def active(self) -> list[tuple[int, SlotState]]:
         return [(i, s) for i, s in enumerate(self.slots) if s is not None]
+
+    def decoding(self) -> list[tuple[int, SlotState]]:
+        return [(i, s) for i, s in enumerate(self.slots)
+                if s is not None and s.phase == DECODING]
 
     def record(self, slot: int, token: int) -> bool:
         """Append a sampled token; True when the request just finished."""
