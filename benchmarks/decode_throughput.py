@@ -1,7 +1,8 @@
-"""Decode-path throughput: continuous batching vs the static batch, and the
-split-KV consmax_decode kernel vs the jnp decode row.
+"""Decode-path throughput: continuous batching vs the static batch, the
+split-KV consmax_decode kernel vs the jnp decode row, and the paged KV pool
+vs contiguous per-slot rows.
 
-Two measurements:
+Three measurements:
 
 * **engine** — a queue of heterogeneous requests (random prompt lengths and
   token budgets) served by (a) the static ``ServeSession`` (everyone padded
@@ -12,8 +13,13 @@ Two measurements:
 * **step** — wall time of one jitted decode step at a pinned cache length,
   jnp row attention vs the split-KV Pallas kernel (interpret mode on CPU;
   the kernel numbers are architecture-mirrors, not CPU speedups).
+* **paged** (``--paged``) — paged-vs-contiguous engine tok/s with peak page
+  occupancy on the same queue, plus one decode step of the ``long_500k``
+  shape served from a page pool holding FEWER total KV cells than
+  ``max_slots x max_seq`` — the HBM claim of the paged design, measured.
 
     PYTHONPATH=src python benchmarks/decode_throughput.py            # quick
+    PYTHONPATH=src python benchmarks/decode_throughput.py --paged    # page pool
     PYTHONPATH=src python benchmarks/decode_throughput.py --full     # paper axes
 """
 from __future__ import annotations
@@ -23,11 +29,12 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import random
 from jax.tree_util import tree_map_with_path
 
 from benchmarks.common import bench_wall, emit
-from repro.configs.base import ServeConfig
+from repro.configs.base import SHAPES, ServeConfig
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.nn.module import Ctx
@@ -69,9 +76,11 @@ def _static_toks_per_s(cfg, params, reqs, max_seq):
     return useful / dt
 
 
-def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel):
+def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
+                           paged=False):
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
-                       decode_kernel=decode_kernel)
+                       decode_kernel=decode_kernel, paged_kv=paged,
+                       page_size=8 if paged else 256)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
 
     def serve():
@@ -85,7 +94,8 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel):
     t0 = time.perf_counter()
     useful = serve()
     dt = time.perf_counter() - t0
-    return useful / dt
+    occ = (eng.pool.peak_in_use / scfg.num_pages) if paged else 0.0
+    return useful / dt, occ
 
 
 def _pin_index(caches, value):
@@ -103,7 +113,43 @@ def _step_us(cfg, params, batch, cache_len, decode_kernel):
     return bench_wall(fn, params, caches, {"tokens": toks}, iters=3, warmup=1)
 
 
-def run(arch="qwen2-1.5b", *, full=False, out_dir="artifacts/bench"):
+def _paged_long_step(cfg, params, rows):
+    """One decode step of the long_500k shape against a page pool that holds
+    FEWER total KV cells than the contiguous max_slots x max_seq block —
+    the acceptance shape of the paged design. Slot 0 sits at full 500k
+    context; the other slots are idle, holding zero pages."""
+    L, _, _ = SHAPES["long_500k"]
+    max_slots, page_size = 4, 1024
+    num_pages = -(-L // page_size) + 8                     # thin headroom
+    scfg = ServeConfig(max_seq=L, max_slots=max_slots, paged_kv=True,
+                       page_size=page_size, num_pages=num_pages)
+    total_cells = num_pages * page_size
+    contiguous_cells = max_slots * L
+    assert total_cells < contiguous_cells, (total_cells, contiguous_cells)
+
+    kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
+    caches = T.init_paged_caches(cfg, max_slots, num_pages, page_size,
+                                 kv_dtype=kv_dtype)
+    caches = tree_map_with_path(
+        lambda p, a: a.at[:, 0].set(L - 1)
+        if getattr(p[-1], "key", None) == "index" else a, caches)
+    table = np.full((max_slots, scfg.max_pages_per_slot), -1, np.int32)
+    table[0, :] = np.arange(scfg.max_pages_per_slot)
+    active = np.zeros((max_slots,), bool)
+    active[0] = True
+    toks = jnp.zeros((max_slots, 1), jnp.int32)
+    inputs = {"tokens": toks, "active": jnp.asarray(active),
+              "page_table": jnp.asarray(table)}
+    _, _, decode_step, _ = make_serve_fns(cfg, scfg)
+    us = bench_wall(jax.jit(decode_step), params, caches, inputs,
+                    iters=2, warmup=1)
+    rows.append(("serve/paged_long500k_step_us", f"{us:.0f}",
+                 f"cells={total_cells};contiguous={contiguous_cells};"
+                 f"saving={1 - total_cells/contiguous_cells:.2%}"))
+
+
+def run(arch="qwen2-1.5b", *, full=False, paged=False,
+        out_dir="artifacts/bench"):
     cfg = get_config(arch, smoke=True)
     params = T.lm_init(Ctx(random.key(0)), cfg)
     rows = []
@@ -115,8 +161,10 @@ def run(arch="qwen2-1.5b", *, full=False, out_dir="artifacts/bench"):
         max_seq = 48
         slots = min(4, n)
         st = _static_toks_per_s(cfg, params, reqs, max_seq)
-        co = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, False)
-        ck = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, True)
+        co, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                       False)
+        ck, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                       True)
         rows.append((f"serve/static_b{n}_tok_s", f"{st:.1f}", "useful_tokens"))
         rows.append((f"serve/continuous_b{n}_tok_s", f"{co:.1f}",
                      f"slots={slots}"))
@@ -124,6 +172,13 @@ def run(arch="qwen2-1.5b", *, full=False, out_dir="artifacts/bench"):
                      f"slots={slots};split_kv"))
         rows.append((f"serve/continuous_b{n}_speedup", f"{co/st:.3f}x",
                      "vs_static_useful"))
+        if paged:
+            pg, occ = _continuous_toks_per_s(cfg, params, reqs, max_seq,
+                                             slots, False, paged=True)
+            rows.append((f"serve/paged_b{n}_tok_s", f"{pg:.1f}",
+                         f"slots={slots};peak_occupancy={occ:.2f}"))
+            rows.append((f"serve/paged_b{n}_vs_contiguous", f"{pg/co:.3f}x",
+                         "same_queue"))
 
     # ---- step: decode latency vs cache length, jnp row vs split-KV ----
     cache_lens = (1024, 8192, 32768) if full else (1024, 4096)
@@ -136,6 +191,10 @@ def run(arch="qwen2-1.5b", *, full=False, out_dir="artifacts/bench"):
                          f"{1e6*b/us_row:.1f}tok_s"))
             rows.append((f"serve/step_L{L}_b{b}_splitkv_us", f"{us_ker:.0f}",
                          f"{1e6*b/us_ker:.1f}tok_s;interpret_on_cpu"))
+
+    # ---- paged: the long_500k shape on a sub-contiguous page pool ----
+    if paged:
+        _paged_long_step(cfg, params, rows)
     emit(rows)
     return rows
 
@@ -145,6 +204,10 @@ if __name__ == "__main__":
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--full", action="store_true",
                     help="paper axes: batch 1-64, cache 1k-32k")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV rows: paged vs contiguous engine tok/s "
+                         "+ occupancy, and one long_500k decode step on a "
+                         "page pool smaller than max_slots x max_seq cells")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.arch, full=args.full)
+    run(args.arch, full=args.full, paged=args.paged)

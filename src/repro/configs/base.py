@@ -143,8 +143,9 @@ class TrainConfig:
 class ServeConfig:
     batch: int = 128
     max_seq: int = 32_768
-    prefill_chunk: int = 2048        # append-at-index prefill chunk size:
-                                     # ONE compiled prefill shape (1, chunk)
+    prefill_chunk: int = 0           # append-at-index prefill chunk size:
+                                     # ONE compiled prefill shape (1, chunk);
+                                     # 0 resolves to min(2048, max_seq)
     kv_cache_dtype: str = "bfloat16"
     seq_shard_kv: bool = False       # shard KV cache along sequence (500k cells)
     q_chunk: int = 2048              # prefill blockwise-attention tiles
@@ -155,6 +156,54 @@ class ServeConfig:
                                      # (0 = one prefill_chunk per iteration)
     decode_kernel: bool = False      # split-KV consmax_decode Pallas kernel
     decode_kv_block: int = 256       # KV shard size for the split-KV kernel
+    # --- paged KV (shared page pool across slots) ---
+    paged_kv: bool = False           # slots map logical rows onto pool pages
+    page_size: int = 256             # KV rows per page (must divide
+                                     # prefill_chunk so chunk writes stay
+                                     # page-regular)
+    num_pages: int = 0               # pool capacity; 0 resolves to
+                                     # max_slots * ceil(max_seq / page_size)
+                                     # (no oversubscription — set lower to
+                                     # share pages across short requests)
+
+    def __post_init__(self):
+        # invalid shapes fail HERE, not deep inside _append_cache_write /
+        # the page-table scatter once a request is already being served
+        if self.prefill_chunk == 0:
+            object.__setattr__(self, "prefill_chunk",
+                               min(2048, self.max_seq))
+        if self.prefill_chunk < 0 or self.max_seq <= 0:
+            raise ValueError(
+                f"ServeConfig: prefill_chunk ({self.prefill_chunk}) and "
+                f"max_seq ({self.max_seq}) must be positive")
+        if self.prefill_chunk > self.max_seq:
+            raise ValueError(
+                f"ServeConfig: prefill_chunk ({self.prefill_chunk}) exceeds "
+                f"max_seq ({self.max_seq}) — an append chunk could not fit "
+                "a slot's KV rows")
+        if self.paged_kv:
+            if self.page_size <= 0:
+                raise ValueError(
+                    f"ServeConfig: page_size ({self.page_size}) must be "
+                    "positive")
+            if self.prefill_chunk % self.page_size:
+                raise ValueError(
+                    f"ServeConfig: page_size ({self.page_size}) must divide "
+                    f"prefill_chunk ({self.prefill_chunk}) so prefill chunk "
+                    "writes start page-aligned")
+            if self.num_pages == 0:
+                object.__setattr__(
+                    self, "num_pages",
+                    self.max_slots * self.max_pages_per_slot)
+            if self.num_pages < self.max_pages_per_slot:
+                raise ValueError(
+                    f"ServeConfig: num_pages ({self.num_pages}) below "
+                    f"max_pages_per_slot ({self.max_pages_per_slot}) — even "
+                    "a single max_seq request could not be served")
+
+    @property
+    def max_pages_per_slot(self) -> int:
+        return -(-self.max_seq // self.page_size)
 
 
 SHAPES = {

@@ -26,6 +26,13 @@ Two execution paths:
   with a sequence-sharded cache, softmax requires global max+sum collectives
   while consmax needs only the output psum (visible in the dry-run HLO).
 
+* ``paged_attention`` — append/decode against a *shared page pool* instead
+  of per-slot contiguous rows: a (num_pages, page_size, hkv, dk) K/V buffer
+  plus a per-slot page table. The KV walk iterates page-table entries; for
+  consmax each page's partial is final (pure-addition combine — the same
+  sync-free property, now doing memory-management work), softmax/softermax
+  keep their online (m, l) fallback across pages.
+
 Supports GQA (grouped KV heads without materializing repeated K/V), partial /
 interleaved RoPE, sliding-window ("local") layers, attn-logit softcapping,
 and cross-attention.
@@ -198,38 +205,27 @@ def _append_cache_write(cache, new, index):
     return jax.vmap(one)(cache, new.astype(cache.dtype), index)
 
 
-def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
-                     window=0, softcap=0.0, merged=True, kv_chunk=1024):
-    """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
-    k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
-    ``index``; lengths: (b,) real (non-pad) tokens in this chunk.
-
-    Each query row attends causally to cache rows < index + lengths. Rows
-    >= lengths are pad queries: their output is garbage and must be ignored
-    by the caller (their K/V never entered the cache — see attention_apply).
-    The KV loop runs only up to the highest filled chunk, so cost tracks the
-    fill level, not the cache capacity.
-    """
+def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
+             norm_params, window=0, softcap=0.0, merged=True):
+    """Shared KV walk behind append_attention / paged_attention: a (b, c)
+    query chunk at per-slot positions index + [0, c) attends cache blocks
+    j = 0..hi, where ``gather(j) -> (k_blk, v_blk)`` yields the
+    (b, kc, hkv, dk) block holding logical rows [j*kc, (j+1)*kc) — a
+    dynamic slice of a contiguous cache, or a one-page-per-slot gather
+    through a page table. Each query row attends causally to rows
+    < index + lengths. For consmax the loop carry is the output accumulator
+    alone (each block's partial is final); softmax/softermax carry the
+    online (m, l) rescale state across blocks."""
     b, c, H, dk = q.shape
-    L_, hkv = k.shape[1], k.shape[2]
     g = H // hkv
-    kc = min(kv_chunk, L_)
-    n_kv = -(-L_ // kc)
-    pad = n_kv * kc - L_
-    if pad:
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-
     qg = q.reshape(b, c, hkv, g, dk)
     qpos = index[:, None] + jnp.arange(c)                    # (b, c)
     kv_len = index + lengths                                 # (b,)
-    hi = jnp.max(-(-kv_len // kc))                           # dynamic bound
     cdt = q.dtype
 
-    def chunk_parts(j):
-        k_blk = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
-        v_blk = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
-        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k_blk,
+    def block_parts(j):
+        k_blk, v_blk = gather(j)
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k_blk.astype(cdt),
                        preferred_element_type=jnp.float32)
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
@@ -238,28 +234,28 @@ def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
         msk &= qpos[:, :, None] >= kpos[None, None, :]
         if window > 0:
             msk &= (qpos[:, :, None] - kpos[None, None, :]) < window
-        return s, v_blk, msk
+        return s, v_blk.astype(cdt), msk
 
     if norm_kind == "consmax":
         def body(j, acc):
-            s, v_blk, msk = chunk_parts(j)
-            ps = normalizers.apply_norm(
+            s, v_blk, msk = block_parts(j)
+            p = normalizers.apply_norm(
                 "consmax", norm_params, s.reshape(b, H, c, kc),
                 msk[:, None], head_axis=1, merged=merged
             ).reshape(b, hkv, g, c, kc)
-            return acc + jnp.einsum("bhgqc,bchd->bqhgd", ps.astype(cdt),
+            return acc + jnp.einsum("bhgqc,bchd->bqhgd", p.astype(cdt),
                                     v_blk, preferred_element_type=jnp.float32)
         acc = jax.lax.fori_loop(
             0, hi, body, jnp.zeros((b, c, hkv, g, dk), jnp.float32))
         return acc.reshape(b, c, H, dk).astype(cdt)
 
-    # online softmax / softermax: the (m, l) carry lives within one chunk
+    # online softmax / softermax: the (m, l) carry spans the whole walk
     base2 = norm_kind == "softermax"
     expf = jnp.exp2 if base2 else jnp.exp
 
     def body(j, carry):
         acc, m, l = carry
-        s, v_blk, msk = chunk_parts(j)
+        s, v_blk, msk = block_parts(j)
         msk = msk[:, None, None]                             # (b,1,1,c,kc)
         s = jnp.where(msk, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
@@ -278,6 +274,94 @@ def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
     acc, _, l = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, c, H, dk).astype(cdt)
+
+
+def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
+                     window=0, softcap=0.0, merged=True, kv_chunk=1024):
+    """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
+    k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
+    ``index``; lengths: (b,) real (non-pad) tokens in this chunk.
+
+    Each query row attends causally to cache rows < index + lengths. Rows
+    >= lengths are pad queries: their output is garbage and must be ignored
+    by the caller (their K/V never entered the cache — see attention_apply).
+    The KV loop runs only up to the highest filled chunk, so cost tracks the
+    fill level, not the cache capacity.
+    """
+    L_ = k.shape[1]
+    kc = min(kv_chunk, L_)
+    n_kv = -(-L_ // kc)
+    pad = n_kv * kc - L_
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    hi = jnp.max(-(-(index + lengths) // kc))                # dynamic bound
+
+    def gather(j):
+        return (jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1),
+                jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1))
+
+    return _kv_walk(q, index, lengths, gather, hi, kc, k.shape[2],
+                    norm_kind=norm_kind, norm_params=norm_params,
+                    window=window, softcap=softcap, merged=merged)
+
+
+# ------------------------------------------------------ paged KV cache ----
+def _paged_cache_write(pool, new, index, lengths, page_table):
+    """Scatter ``new``: (b, c, hkv, dk) into the shared page ``pool``:
+    (P, ps, hkv, dk) at per-slot logical rows [index, index + lengths).
+
+    Logical row t of slot b lands in pool page ``page_table[b, t // ps]``,
+    page row ``t % ps``. Pad rows (>= lengths) and rows whose page-table
+    entry is unmapped are routed out of bounds and dropped by the scatter —
+    no pad-token K/V ever reaches a page, mirroring the contiguous append
+    path. Slots own disjoint pages (the PagePool invariant), so the scatter
+    indices never collide."""
+    P, ps = pool.shape[0], pool.shape[1]
+    b, c = new.shape[:2]
+    pos = index[:, None] + jnp.arange(c)[None, :]            # (b, c) logical
+    valid = jnp.arange(c)[None, :] < lengths[:, None]
+    logical_page = pos // ps
+    pid = jnp.take_along_axis(
+        page_table, jnp.clip(logical_page, 0, page_table.shape[1] - 1),
+        axis=1)
+    oob = ~valid | (logical_page >= page_table.shape[1]) | (pid < 0)
+    pid = jnp.where(oob, P, pid)                             # dropped below
+    row = pos % ps
+    return pool.at[pid.reshape(-1), row.reshape(-1)].set(
+        new.reshape((b * c,) + new.shape[2:]).astype(pool.dtype),
+        mode="drop")
+
+
+def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
+                    norm_params, window=0, softcap=0.0, merged=True):
+    """Attention of a (b, c, H, dk) chunk against page-pool KV.
+
+    kp, vp: (P, ps, hkv, dk) shared pools; page_table: (b, max_pages) int32
+    (-1 = unmapped); index: (b,) chunk start positions; lengths: (b,) real
+    tokens in the chunk. Covers both chunked append prefill (c > 1) and
+    one-token decode (c == 1, lengths = active mask — an inactive slot gets
+    kv_len = index, i.e. a fully masked row whose output is discarded).
+
+    The KV walk iterates *page-table entries*: iteration j gathers one page
+    per slot (``kp[page_table[:, j]]``, a batched one-page gather) holding
+    logical rows [j*ps, (j+1)*ps), bounded by the highest filled page across
+    the batch — cost tracks fill level, not pool capacity. For consmax the
+    carry is the output accumulator alone: each page's ``exp(s-beta)/gamma
+    @ v`` partial is final (the paper's sync-free property is what makes
+    paging this cheap). softmax/softermax keep their online (m, l) rescale
+    fallback across pages. Unmapped entries are clamped to page 0; every
+    position they could contribute sits at kpos >= kv_len and is masked."""
+    ps = kp.shape[1]
+    hi = jnp.max(-(-(index + lengths) // ps))                # dynamic bound
+
+    def gather(j):
+        pid = jnp.maximum(page_table[:, j], 0)               # (b,)
+        return kp[pid], vp[pid]                              # (b, ps, hkv, dk)
+
+    return _kv_walk(q, index, lengths, gather, hi, ps, kp.shape[2],
+                    norm_kind=norm_kind, norm_params=norm_params,
+                    window=window, softcap=softcap, merged=merged)
 
 
 # ---------------------------------------------------- decode attention ----
@@ -316,7 +400,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     positions=None, cache=None, cond=None, merged=False,
                     q_chunk: int = 2048, kv_chunk: int = 1024,
                     decode_kernel: bool = False, decode_kv_block: int = 256,
-                    prefill_append=None, decode_active=None):
+                    prefill_append=None, decode_active=None, page_table=None):
     """Self- or cross-attention over x: (b, s, d).
 
     cache: None (train/prefill) or dict(k, v, index) for one-token decode.
@@ -331,6 +415,10 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     decode_active: (b,) bool — one-token decode only: slots where False
     keep their cache row and index untouched (their logits are garbage to
     be discarded), letting a shared decode step skip prefilling/free slots.
+    page_table: (b, max_pages) int32 — paged KV: the cache's k/v leaves are
+    shared (num_pages, page_size, hkv, dk) pools and each slot's logical
+    rows live on the pages its table row maps (-1 = unmapped). Applies to
+    the chunked-prefill and one-token decode cache paths only.
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -353,7 +441,48 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     if rot % 2:
         rot -= 1
 
-    if cache is not None and prefill_append is not None and not cross:
+    if cache is not None and page_table is not None and not cross:
+        # paged KV: cache k/v leaves are shared (P, ps, hkv, dk) page pools.
+        # One code path covers chunked append prefill (s = chunk) and
+        # one-token decode (s == 1, where the active mask doubles as the
+        # chunk length: an inactive slot writes nothing and reads a fully
+        # masked row).
+        if prefill_append is None and s > 1:
+            raise NotImplementedError(
+                "paged KV caches serve chunked prefill (prefill_append) "
+                "and one-token decode only — whole-prompt prefill writes "
+                "contiguous rows")
+        idx = cache["index"]                                 # (b,) int32
+        if prefill_append is not None:
+            lengths = prefill_append.astype(jnp.int32)
+        else:
+            lengths = (jnp.ones((b,), jnp.int32) if decode_active is None
+                       else decode_active.astype(jnp.int32))
+        if rope_on:
+            pos = idx[:, None] + jnp.arange(s)[None, :]
+            q = R.apply_rope(q, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+            k = R.apply_rope(k, pos, rotary_dim=rot, theta=cfg.rope_theta,
+                             interleaved=interleaved)
+        # pad rows / inactive slots are dropped by the scatter itself
+        kp = _paged_cache_write(cache["k"], k, idx, lengths, page_table)
+        vp = _paged_cache_write(cache["v"], v, idx, lengths, page_table)
+        if (prefill_append is None and decode_kernel
+                and cfg.score_norm == "consmax"):
+            from repro.kernels.consmax_decode.ops import consmax_decode_paged_op
+            out = consmax_decode_paged_op(
+                q, kp, vp, page_table, idx + lengths,
+                jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
+                jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
+                window=window, softcap=cfg.attn_softcap, merged=merged,
+                scale=1.0)
+        else:
+            out = paged_attention(
+                q, kp, vp, page_table, idx, lengths,
+                norm_kind=cfg.score_norm, norm_params=p["score_norm"],
+                window=window, softcap=cfg.attn_softcap, merged=merged)
+        new_cache = {"k": kp, "v": vp, "index": idx + lengths}
+    elif cache is not None and prefill_append is not None and not cross:
         # chunked append-at-index prefill: x is a (b, c) chunk at per-slot
         # cache position ``index``; prefill_append holds real chunk lengths
         idx = cache["index"]                                 # (b,) int32

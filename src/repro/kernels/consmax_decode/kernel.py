@@ -123,3 +123,99 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
 
     out = jnp.sum(partials, axis=2)                  # the sync-free combine
     return out.reshape(b, nh, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------- paged KV ----
+def _paged_kernel(tab_ref, len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
+                  o_ref, *, scale: float, window: int, softcap: float,
+                  ps: int, g: int, merged: bool):
+    ib, ij = pl.program_id(0), pl.program_id(2)
+
+    q = q_ref[0, 0]                                  # (g, d)
+    k = k_ref[0, :, 0].astype(q.dtype)               # (ps, d) — one page
+    v = v_ref[0, :, 0].astype(q.dtype)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    n = len_ref[ib]                                  # valid logical rows
+    kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
+    mask = kpos < n                                  # unmapped page => all
+    if window > 0:                                   # kpos >= n => zeroed
+        mask &= (n - 1 - kpos) < window
+
+    beta = beta_ref[0][:, None]                      # (g, 1)
+    gamma = gamma_ref[0][:, None]
+    if merged:
+        p = jnp.exp(-beta) / gamma * jnp.exp(s)      # Eq. 3 (C merged)
+    else:
+        p = jnp.exp(s - beta) / gamma                # Eq. 2
+    p = jnp.where(mask, p, 0.0)
+
+    o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
+                         window: int = 0, softcap: float = 0.0,
+                         merged: bool = True, scale: float | None = None,
+                         interpret: bool = False):
+    """Paged split-KV ConSmax decode. q: (b, nh, d); kp, vp: shared page
+    pools (P, ps, nkv, d); page_table: (b, max_pages) int32 (-1 = unmapped);
+    lengths: (b,) valid logical rows; beta/gamma: (nh,) fp32.
+
+    The KV grid axis iterates *page-table entries*: the table rides in as a
+    scalar-prefetch operand, so program (ib, ih, ij) DMAs pool page
+    ``page_table[ib, ij]`` straight from HBM — the gather lives in the
+    BlockSpec index map, no materialized per-slot contiguous cache. Every
+    grid dim stays ``parallel``: page partials are independent (no running
+    max, no denominator) and combine by the same caller-side fp32 addition
+    as the contiguous kernel. Unmapped entries clamp to page 0 and are
+    fully masked via ``lengths``, so they contribute exact zeros.
+    """
+    b, nh, d = q.shape
+    P, ps, nkv = kp.shape[0], kp.shape[1], kp.shape[2]
+    g = nh // nkv
+    npg = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+
+    qg = q.reshape(b, nkv, g, d)
+    beta2 = beta.reshape(nkv, g).astype(jnp.float32)
+    gamma2 = gamma.reshape(nkv, g).astype(jnp.float32)
+    tab = page_table.astype(jnp.int32)
+    len1 = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               softcap=softcap, ps=ps, g=g, merged=merged)
+
+    def page_map(ib, ih, ij, tab_ref, len_ref):
+        return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # page table + lengths
+        grid=(b, nkv, npg),
+        in_specs=[
+            pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # beta
+            pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # gamma
+            pl.BlockSpec((1, 1, g, d),
+                         lambda ib, ih, ij, *_: (ib, ih, 0, 0)),    # q
+            pl.BlockSpec((1, ps, 1, d), page_map),                  # k page
+            pl.BlockSpec((1, ps, 1, d), page_map),                  # v page
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, g, d),
+                               lambda ib, ih, ij, *_: (ib, ih, ij, 0, 0)),
+    )
+    partials = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nkv, npg, g, d), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+    )(tab, len1, beta2, gamma2, qg, kp, vp)
+
+    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    return out.reshape(b, nh, d).astype(q.dtype)

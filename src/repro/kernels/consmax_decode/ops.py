@@ -12,7 +12,8 @@ from functools import partial
 
 import jax
 
-from repro.kernels.consmax_decode.kernel import consmax_decode
+from repro.kernels.consmax_decode.kernel import (consmax_decode,
+                                                consmax_decode_paged)
 
 
 def _on_cpu() -> bool:
@@ -36,4 +37,24 @@ def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
     out = consmax_decode(qt, kt, vt, index + 1, beta, gamma, window=window,
                          softcap=softcap, merged=merged, scale=scale, bk=bk,
                          interpret=interp)
+    return out[:, None]
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
+                                   "interpret"))
+def consmax_decode_paged_op(q, kp, vp, page_table, lengths, beta, gamma, *,
+                            window=0, softcap=0.0, merged=True, scale=None,
+                            interpret=None):
+    """Paged-pool variant. q: (b, 1, H, dk); kp, vp: shared page pools
+    (P, ps, hkv, dk) in the model's cache layout (no transpose — the kernel
+    blocks the hkv axis directly, so the pool is never copied per step);
+    page_table: (b, max_pages) int32; lengths: (b,) valid logical rows
+    (index + active, already counting the token written this step).
+
+    Returns (b, 1, H, dk) in q.dtype.
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    out = consmax_decode_paged(q[:, 0], kp, vp, page_table, lengths, beta,
+                               gamma, window=window, softcap=softcap,
+                               merged=merged, scale=scale, interpret=interp)
     return out[:, None]

@@ -43,6 +43,17 @@ def main():
     ap.add_argument("--decode-kernel", action="store_true",
                     help="split-KV consmax decode Pallas kernel "
                          "(consmax archs only; errors otherwise)")
+    ap.add_argument("--paged", action="store_true",
+                    help="shared page-pool KV cache (continuous engine "
+                         "only): slots map rows onto pool pages instead of "
+                         "owning max_seq contiguous rows")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV rows per pool page (must divide "
+                         "--prefill-chunk)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="pool capacity; 0 = max_slots * "
+                         "ceil(max_seq / page_size), i.e. no sharing gain — "
+                         "set lower to oversubscribe slots onto fewer cells")
     args = ap.parse_args()
 
     from jax import random
@@ -80,7 +91,9 @@ def main():
                        prefill_chunk=args.prefill_chunk,
                        prefill_budget=args.prefill_budget,
                        max_slots=args.max_slots,
-                       decode_kernel=args.decode_kernel)
+                       decode_kernel=args.decode_kernel,
+                       paged_kv=args.paged, page_size=args.page_size,
+                       num_pages=args.num_pages)
     eng = ContinuousBatchingEngine(
         cfg, scfg, params, temperature=args.temperature,
         key=random.key(2) if args.temperature > 0 else None)
@@ -98,7 +111,12 @@ def main():
     n = sum(len(v) for v in results.values())
     print(f"[serve/continuous] {len(results)} requests, {n} tokens in "
           f"{dt:.2f}s ({n/dt:.1f} tok/s) with {args.max_slots} slots, "
-          f"decode_kernel={args.decode_kernel}")
+          f"decode_kernel={args.decode_kernel}, paged={args.paged}")
+    if args.paged:
+        print(f"[serve/continuous] page pool: {scfg.num_pages} pages x "
+              f"{scfg.page_size} rows "
+              f"(peak in use {eng.pool.peak_in_use}) vs "
+              f"{args.max_slots} x {scfg.max_seq} contiguous rows")
     if uids:
         print("[serve/continuous] sample:", results[uids[0]])
 

@@ -46,7 +46,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              caches=None, positions=None, merged=False, remat="full",
              q_chunk=2048, kv_chunk=1024, logits_slice=None,
              logits_index=None, decode_kernel=False, decode_kv_block=256,
-             prefill_append=None, decode_active=None):
+             prefill_append=None, decode_active=None, page_table=None):
     """Forward pass.
 
     tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
@@ -61,6 +61,9 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
     at its per-slot ``index`` (which then advances by the real length).
     decode_active: (b,) bool — one-token decode: slots where False keep
     cache rows and index untouched (shared decode step over a slot pool).
+    page_table: (b, max_pages) int32 — paged KV serving: attention caches
+    are shared page pools (see init_paged_caches) and each slot's logical
+    rows live on the pages its table row maps.
     Returns (logits, new_caches, aux_loss).
     """
     b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
@@ -84,7 +87,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
                 bp[f"b{i}"], x, cfg, kind, positions=positions, cache=ci,
                 cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk,
                 decode_kernel=decode_kernel, decode_kv_block=decode_kv_block,
-                prefill_append=prefill_append, decode_active=decode_active)
+                prefill_append=prefill_append, decode_active=decode_active,
+                page_table=page_table)
             aux = aux + a
             if cache_in is not None:
                 new_caches[f"b{i}"] = co
@@ -155,6 +159,38 @@ def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
         one)
 
 
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
+                      page_size: int, kv_dtype=jnp.bfloat16):
+    """Paged decode caches: ONE shared (num_pages, page_size, hkv, dk) K/V
+    pool per layer instead of a per-slot (batch, max_seq, ...) row block;
+    the per-slot ``index`` vector keeps its contiguous semantics (fill
+    level in *logical* rows). Which pool pages back which slot lives in the
+    host-side page table (serve/scheduler.PagePool), passed to lm_apply as
+    ``page_table`` — all layers fill in lockstep, so one table serves the
+    whole stack. Attention-only: paged serving of recurrent state has no
+    meaning (their cache is O(1) per slot already)."""
+    def one_super():
+        c = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            if kind in ("attn", "attn_moe", "global", "local"):
+                hkv, dk = cfg.n_kv_heads, cfg.head_dim_
+                c[f"b{i}"] = {"attn": {
+                    "k": jnp.zeros((num_pages, page_size, hkv, dk), kv_dtype),
+                    "v": jnp.zeros((num_pages, page_size, hkv, dk), kv_dtype),
+                    "index": jnp.zeros((batch,), jnp.int32),
+                }}
+            else:
+                raise NotImplementedError(
+                    f"paged KV caches cover attention blocks only "
+                    f"(got {kind!r} in {cfg.block_pattern})")
+        return c
+
+    one = one_super()
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_super_layers,) + a.shape).copy(),
+        one)
+
+
 # ------------------------------------------------- cache slot utilities ----
 # Continuous batching (serve/engine.py) treats the cache batch dim as a pool
 # of independent slots: each slot holds one request at its own position. The
@@ -202,6 +238,16 @@ def reset_slot(caches, slot):
     cleared) so a recycled slot cannot leak a previous request's context."""
     return jax.tree.map(lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
                         caches)
+
+
+def reset_slot_paged(caches, slot):
+    """Paged-cache recycle: only the per-slot ``index`` is slot-addressed —
+    K/V pages go back to the host-side free list, and any stale rows a
+    future owner inherits sit at kpos >= its kv_len, i.e. permanently
+    masked (``reset_slot`` would instead zero pool page ``slot``, which
+    belongs to whoever the allocator gave it to)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: a.at[:, slot].set(0) if _is_index(p) else a, caches)
 
 
 def cache_axes(cfg: ModelConfig):

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import transformer as T
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import PagePool, Scheduler
 
 
 def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
@@ -76,7 +76,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
     def decode_step(params, caches, batch_inputs):
         """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d),
         plus optional ``active`` (b,) bool — slots where False keep cache
-        row and index untouched (their logits are garbage to discard)."""
+        row and index untouched (their logits are garbage to discard) —
+        and optional ``page_table`` (b, max_pages) int32 for paged caches."""
         kw = _model_inputs(cfg, batch_inputs)
         index = T.cache_index(caches)
         positions = index[:, None] if index is not None else None
@@ -84,7 +85,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             params, cfg, caches=caches, merged=True, positions=positions,
             decode_kernel=scfg.decode_kernel,
             decode_kv_block=scfg.decode_kv_block,
-            decode_active=batch_inputs.get("active"), **kw)
+            decode_active=batch_inputs.get("active"),
+            page_table=batch_inputs.get("page_table"), **kw)
         return logits[:, -1], caches
 
     return init_caches, prefill_step, decode_step, prefill_ragged
@@ -106,6 +108,10 @@ class ServeSession:
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
                  positions_fallback: bool = False):
+        if scfg.paged_kv:
+            raise NotImplementedError(
+                "ServeSession is the static contiguous baseline; paged KV "
+                "serving lives in ContinuousBatchingEngine")
         self.cfg, self.scfg = cfg, scfg
         self.params = params
         ic, pf, dc, pr = make_serve_fns(cfg, scfg)
@@ -188,6 +194,17 @@ class ContinuousBatchingEngine:
     ``(1, prefill_chunk)`` is compiled for the engine's entire lifetime —
     admission never recompiles, and no pad-token K/V ever enters a slot.
 
+    With ``ServeConfig.paged_kv=True`` the per-slot contiguous
+    ``(max_slots, max_seq)`` KV rows become ONE shared
+    ``(num_pages, page_size)`` page pool per layer: slots map logical rows
+    onto pool pages through a host-side page table
+    (``serve/scheduler.PagePool`` — free-list allocation on demand,
+    reservation-gated admission, release on completion), so serving
+    ``max_seq = 500k`` no longer costs ``max_slots x 500k`` cells of HBM.
+    ConSmax is what keeps the paged path cheap: page partials need no
+    online-softmax combine, and the paged split-KV kernel iterates
+    page-table entries straight from a scalar-prefetch operand.
+
     Restricted to pure-attention token archs: chunked prefill appends into
     attention KV caches; recurrent (mamba/xlstm) state and cross-attention
     cond streams stay on the static ``ServeSession`` path.
@@ -204,15 +221,31 @@ class ContinuousBatchingEngine:
         self.cfg, self.scfg = cfg, scfg
         self.params = params
         self.temperature, self.key = temperature, key
-        self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq)
         kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
-        self.caches = T.init_caches(cfg, scfg.max_slots, scfg.max_seq,
-                                    kv_dtype=kv_dtype)
+        self.paged = scfg.paged_kv
+        if self.paged:
+            # shared page pool: num_pages x page_size KV rows serve every
+            # slot; the host-side PagePool maps (slot, logical page) ->
+            # pool page and gates admission on worst-case reservations
+            self.pool = PagePool(scfg.num_pages, scfg.page_size,
+                                 scfg.max_slots, scfg.max_pages_per_slot)
+            self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq,
+                                       page_pool=self.pool)
+            self.caches = T.init_paged_caches(
+                cfg, scfg.max_slots, scfg.num_pages, scfg.page_size,
+                kv_dtype=kv_dtype)
+        else:
+            self.pool = None
+            self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq)
+            self.caches = T.init_caches(cfg, scfg.max_slots, scfg.max_seq,
+                                        kv_dtype=kv_dtype)
         self.results: dict[int, list[int]] = {}
         self._steps = 0
         self._draws = 0
-        self._chunk = min(scfg.prefill_chunk, scfg.max_seq)
+        self._chunk = scfg.prefill_chunk
         self._budget = scfg.prefill_budget or self._chunk
+        self._table_dev = None             # device page table, re-uploaded
+        self._table_version = -1           # only when the pool mutates
 
         def prefill_chunk_step(params, caches, slot, tokens, lengths):
             """One append chunk for one slot. tokens: (1, chunk) with rows
@@ -233,14 +266,44 @@ class ContinuousBatchingEngine:
                 caches, slot_caches)
             return logits[:, 0], caches
 
+        def prefill_chunk_step_paged(params, caches, slot, tokens, lengths,
+                                     page_row):
+            """Paged twin: only the per-slot ``index`` leaves are
+            slot-addressed (sliced out / written back); the K/V pools are
+            shared, and the append lands on them via the slot's page-table
+            row (``page_row``: (1, max_pages)) inside the model step."""
+            def take(path, a):
+                if T._is_index(path):
+                    return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+                return a
+            slot_caches = jax.tree_util.tree_map_with_path(take, caches)
+            logits, slot_caches, _ = T.lm_apply(
+                params, cfg, tokens=tokens, caches=slot_caches, merged=True,
+                prefill_append=lengths, logits_index=lengths[0] - 1,
+                q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
+                page_table=page_row)
+            def put(path, big, one):
+                if T._is_index(path):
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        big, one.astype(big.dtype), slot, axis=1)
+                return one                    # shared pool: scatter updated
+            caches = jax.tree_util.tree_map_with_path(put, caches,
+                                                      slot_caches)
+            return logits[:, 0], caches
+
         _, _, decode_step, _ = make_serve_fns(cfg, scfg)
         # the engine rebinds self.caches to each result immediately, so the
         # cache pool buffer is donated — prefill/decode/reset update the
-        # n_layers x max_slots x max_seq K/V pool in place instead of
-        # copying it per call (donation is a no-op on CPU smoke runs)
-        self._prefill = jax.jit(prefill_chunk_step, donate_argnums=(1,))
+        # n_layers x max_slots x max_seq K/V rows (or the shared page pool)
+        # in place instead of copying per call (donation is a no-op on CPU
+        # smoke runs)
+        self._prefill = jax.jit(
+            prefill_chunk_step_paged if self.paged else prefill_chunk_step,
+            donate_argnums=(1,))
         self._decode = jax.jit(decode_step, donate_argnums=(1,))
-        self._reset = jax.jit(T.reset_slot, donate_argnums=(0,))
+        self._reset = jax.jit(
+            T.reset_slot_paged if self.paged else T.reset_slot,
+            donate_argnums=(0,))
 
     # --------------------------------------------------------- frontend ----
     def submit(self, prompt, max_new_tokens: int,
@@ -278,14 +341,39 @@ class ContinuousBatchingEngine:
         the append-at-index design's no-recompile guarantee)."""
         return self._prefill._cache_size()
 
+    @property
+    def decode_cache_size(self) -> int:
+        """Compiled decode variants so far (1 for the whole lifetime: the
+        page table is a value, never a shape)."""
+        return self._decode._cache_size()
+
+    @property
+    def page_occupancy(self) -> float:
+        """Fraction of pool pages currently mapped (paged engines only)."""
+        return self.pool.occupancy() if self.pool is not None else 0.0
+
     # ---------------------------------------------------------- internals ----
+    def _device_table(self):
+        """Device copy of the pool's page table, re-uploaded only when the
+        allocator actually mapped or released pages — decode steps between
+        mutations (the common case: one token, no new page) reuse the
+        resident buffer instead of paying a host transfer per token."""
+        if self._table_version != self.pool.version:
+            self._table_dev = jnp.asarray(self.pool.table)
+            self._table_version = self.pool.version
+        return self._table_dev
+
     def _prefill_one(self, slot: int, start: int, n: int):
         prompt = self.scheduler.slots[slot].request.prompt
         chunk = prompt[start:start + n] + [0] * (self._chunk - n)
-        logits, self.caches = self._prefill(
-            self.params, self.caches, jnp.asarray(slot, jnp.int32),
-            jnp.asarray(chunk, jnp.int32)[None, :],
-            jnp.asarray([n], jnp.int32))
+        args = (self.params, self.caches, jnp.asarray(slot, jnp.int32),
+                jnp.asarray(chunk, jnp.int32)[None, :],
+                jnp.asarray([n], jnp.int32))
+        if self.paged:
+            # map pages for rows [0, start + n) before the device write
+            self.pool.ensure(slot, start + n)
+            args += (self._device_table()[slot:slot + 1],)
+        logits, self.caches = self._prefill(*args)
         if self.scheduler.record_prefill(slot, n):
             # prompt complete: sample the first output token
             tok = int(self._sample(logits)[0])
@@ -298,9 +386,14 @@ class ContinuousBatchingEngine:
         for slot, state in self.scheduler.decoding():
             toks[slot, 0] = state.last_token
             active[slot] = True
-        logits, self.caches = self._decode(
-            self.params, self.caches,
-            {"tokens": jnp.asarray(toks), "active": jnp.asarray(active)})
+            if self.paged:
+                # this step writes the last sampled token's K/V at row
+                # filled + generated - 1; make sure that row has a page
+                self.pool.ensure(slot, state.filled + len(state.generated))
+        inputs = {"tokens": jnp.asarray(toks), "active": jnp.asarray(active)}
+        if self.paged:
+            inputs["page_table"] = self._device_table()
+        logits, self.caches = self._decode(self.params, self.caches, inputs)
         sampled = np.asarray(self._sample(logits))
         for slot, _ in self.scheduler.decoding():
             if self.scheduler.record(slot, int(sampled[slot])):

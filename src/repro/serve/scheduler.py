@@ -18,9 +18,11 @@ token; the engine then samples the first output token from the last chunk's
 logits and the slot joins the decode batch.
 
 This module is pure Python bookkeeping: who sits where, what was generated,
-when a slot frees up. All device work (chunked prefill, decode, cache
-updates) lives in engine.ContinuousBatchingEngine, which drives this
-scheduler.
+when a slot frees up — plus, for paged KV serving, ``PagePool``: the int32
+free-list allocator that maps each slot's logical KV rows onto shared pool
+pages and gates admission on worst-case reservations. All device work
+(chunked prefill, decode, cache updates) lives in
+engine.ContinuousBatchingEngine, which drives this scheduler.
 """
 from __future__ import annotations
 
@@ -28,8 +30,111 @@ import itertools
 from collections import deque
 from dataclasses import dataclass, field
 
+import numpy as np
+
 PREFILLING = "prefilling"
 DECODING = "decoding"
+
+
+class PagePool:
+    """Int32 free-list allocator for a shared KV page pool.
+
+    The device holds ONE ``(num_pages, page_size, hkv, dk)`` K/V buffer per
+    layer; this class owns the host-side mapping from (slot, logical page
+    index) to pool page ids. ``table`` is the dense ``(max_slots,
+    max_pages_per_slot)`` int32 page table the jitted steps consume verbatim
+    (-1 = unmapped); the free list is a LIFO stack of page ids.
+
+    Allocation is on demand (``ensure`` maps pages as a slot's fill level
+    grows) but admission is reservation-based: ``reserve`` commits the
+    slot's *worst-case* page count (prompt + token budget) up front, and
+    ``ensure`` never maps beyond a slot's reservation — so the pool can
+    never deadlock with every slot mid-request and no page free. Invariants
+    (property-tested in tests/test_paged_kv.py):
+
+    * a page id is owned by at most one slot,
+    * free pages + mapped pages always sum to ``num_pages``,
+    * ``release(slot)`` returns every page the slot held.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_slots: int,
+                 max_pages_per_slot: int):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.max_pages_per_slot = max_pages_per_slot
+        self.table = np.full((max_slots, max_pages_per_slot), -1, np.int32)
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._held = [0] * max_slots       # pages currently mapped per slot
+        self._reserved = [0] * max_slots   # worst-case pages per slot
+        self.peak_in_use = 0
+        self.version = 0                   # bumped on every table mutation —
+                                           # lets the engine keep a device
+                                           # copy and re-upload only on change
+
+    # ------------------------------------------------------------ stats ----
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def occupancy(self) -> float:
+        return self.in_use / self.num_pages
+
+    def pages_for(self, rows: int) -> int:
+        return -(-rows // self.page_size)
+
+    def owned(self, slot: int) -> list[int]:
+        return [int(p) for p in self.table[slot, :self._held[slot]]]
+
+    # ------------------------------------------------------- allocation ----
+    def reserve(self, slot: int, rows: int) -> bool:
+        """Commit ``rows`` worst-case KV rows for ``slot``; False (and no
+        state change) when the pool cannot guarantee them."""
+        if self._reserved[slot]:
+            raise ValueError(f"slot {slot} already holds a reservation")
+        need = self.pages_for(rows)
+        if need > self.max_pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: {rows} rows need {need} pages > "
+                f"max_pages_per_slot ({self.max_pages_per_slot})")
+        if sum(self._reserved) + need > self.num_pages:
+            return False
+        self._reserved[slot] = need
+        return True
+
+    def ensure(self, slot: int, rows: int) -> list[int]:
+        """Map pages so logical rows [0, rows) of ``slot`` are backed;
+        returns the newly allocated page ids (often empty)."""
+        need = self.pages_for(rows)
+        if need > self._reserved[slot]:
+            raise ValueError(
+                f"slot {slot}: {rows} rows exceed the reservation "
+                f"({self._reserved[slot]} pages)")
+        new = []
+        while self._held[slot] < need:
+            pid = self._free.pop()        # cannot fail: held <= reserved
+            self.table[slot, self._held[slot]] = pid
+            self._held[slot] += 1
+            new.append(pid)
+        if new:
+            self.version += 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return new
+
+    def release(self, slot: int) -> list[int]:
+        """Return every page ``slot`` holds to the free list and drop its
+        reservation; returns the released page ids."""
+        pages = self.owned(slot)
+        self._free.extend(pages)
+        self.table[slot, :] = -1
+        self._held[slot] = 0
+        self._reserved[slot] = 0
+        if pages:
+            self.version += 1
+        return pages
 
 
 @dataclass
@@ -61,11 +166,18 @@ class SlotState:
 
 class Scheduler:
     """Admission queue + slot table. max_seq bounds prompt + generation so a
-    slot can never overflow its KV-cache rows."""
+    slot can never overflow its KV-cache rows.
 
-    def __init__(self, max_slots: int, max_seq: int):
+    With a ``page_pool`` (paged KV serving), admission additionally requires
+    a worst-case page reservation — a request stays queued (FIFO order
+    preserved) until the pool can guarantee prompt + token-budget rows — and
+    ``finish`` releases every page the slot held."""
+
+    def __init__(self, max_slots: int, max_seq: int,
+                 page_pool: PagePool | None = None):
         self.max_slots = max_slots
         self.max_seq = max_seq
+        self.page_pool = page_pool
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * max_slots
         self._uids = itertools.count()
@@ -96,7 +208,11 @@ class Scheduler:
         slot = self.free_slot()
         if slot is None or not self.queue:
             return None
-        req = self.queue.popleft()
+        req = self.queue[0]
+        if self.page_pool is not None and not self.page_pool.reserve(
+                slot, len(req.prompt) + req.max_new_tokens):
+            return None                   # pool full: request stays queued
+        self.queue.popleft()
         self.slots[slot] = SlotState(req)
         return slot, req
 
@@ -155,9 +271,12 @@ class Scheduler:
         return state.done()
 
     def finish(self, slot: int) -> tuple[int, list[int]]:
-        """Recycle the slot; returns (uid, generated tokens)."""
+        """Recycle the slot (releasing its pages, if paged); returns
+        (uid, generated tokens)."""
         state = self.slots[slot]
         self.slots[slot] = None
+        if self.page_pool is not None:
+            self.page_pool.release(slot)
         return state.request.uid, state.generated
 
     # ----------------------------------------------------------- status ----

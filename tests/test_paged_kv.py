@@ -1,0 +1,299 @@
+"""Paged KV-cache pool: allocator invariants, serving bit-parity, the
+one-compiled-shape guarantee, and ServeConfig construction-time validation.
+
+* PagePool property tests (hypothesis when available, plus an
+  always-on seeded random walk): under arbitrary admit/extend/finish
+  sequences no page is ever owned by two slots, free + owned pages always
+  sum to ``num_pages``, and a finished slot returns every page it held.
+* Paged engine output is bit-identical to the contiguous engine AND to solo
+  decode on the qwen2/gemma2/grok smoke configs — GQA, local-window,
+  softcap, the paged split-KV kernel, multi-chunk ragged admissions, and a
+  pool small enough that admission has to wait for released pages.
+* Trace counts for the paged prefill and decode steps stay at 1 across an
+  engine lifetime of mixed-length traffic (the page table is a value, not
+  a shape).
+* Invalid ServeConfig shapes (prefill_chunk > max_seq, page_size not
+  dividing prefill_chunk, undersized pool) raise at construction, not deep
+  inside a cache write mid-request.
+"""
+import random as pyrandom
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import random
+
+from repro.configs.base import ServeConfig
+from repro.configs.registry import get_config
+from repro.models import transformer as T
+from repro.nn.module import Ctx
+from repro.serve.engine import ContinuousBatchingEngine, ServeSession
+from repro.serve.scheduler import PagePool
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # bare env: seeded walk
+    HAVE_HYPOTHESIS = False                           # below still runs
+
+
+# ------------------------------------------------- allocator invariants ----
+def _check_invariants(pool: PagePool, num_pages: int, max_slots: int):
+    """The three properties the page pool must never violate."""
+    owned = [pool.owned(s) for s in range(max_slots)]
+    flat = [p for o in owned for p in o]
+    assert len(flat) == len(set(flat)), f"page owned twice: {owned}"
+    assert all(0 <= p < num_pages for p in flat)
+    assert pool.free_pages + len(flat) == num_pages, (
+        f"leak: {pool.free_pages} free + {len(flat)} owned != {num_pages}")
+    for s, o in enumerate(owned):
+        table_row = [int(p) for p in pool.table[s] if p >= 0]
+        assert table_row == o, f"table/owned mismatch for slot {s}"
+
+
+def _drive(pool: PagePool, num_pages: int, max_slots: int, page_size: int,
+           ops: list[tuple[int, int, int]]):
+    """Interpret an arbitrary op sequence against the pool, checking the
+    invariants after every step. ops: (kind, slot, amount) triples —
+    kind 0 = admit (reserve `amount` rows), 1 = extend (ensure rows up to
+    `amount` past what's backed), 2 = finish (release)."""
+    max_rows = pool.max_pages_per_slot * page_size
+    reserved_rows = [0] * max_slots                   # our model of the pool
+    backed_rows = [0] * max_slots
+    for kind, slot, amount in ops:
+        slot %= max_slots
+        if kind == 0 and not reserved_rows[slot]:
+            rows = 1 + amount % max_rows
+            if pool.reserve(slot, rows):
+                reserved_rows[slot] = rows
+        elif kind == 1 and reserved_rows[slot]:
+            rows = min(backed_rows[slot] + 1 + amount % (2 * page_size),
+                       reserved_rows[slot])
+            pool.ensure(slot, rows)
+            backed_rows[slot] = max(backed_rows[slot], rows)
+            assert len(pool.owned(slot)) == pool.pages_for(backed_rows[slot])
+        elif kind == 2 and reserved_rows[slot]:
+            held = set(pool.owned(slot))
+            released = set(pool.release(slot))
+            assert released == held, "finished slot kept pages"
+            assert not pool.owned(slot)
+            reserved_rows[slot] = backed_rows[slot] = 0
+        _check_invariants(pool, num_pages, max_slots)
+
+
+def test_page_pool_random_walk_keeps_invariants():
+    """Seeded stdlib-random walk — exercised even without hypothesis."""
+    rng = pyrandom.Random(0)
+    for trial in range(20):
+        num_pages = rng.randint(1, 24)
+        max_slots = rng.randint(1, 6)
+        page_size = rng.choice([1, 2, 4, 8])
+        mpps = rng.randint(1, max(1, num_pages))
+        pool = PagePool(num_pages, page_size, max_slots, mpps)
+        ops = [(rng.randint(0, 2), rng.randint(0, max_slots - 1),
+                rng.randint(0, 64)) for _ in range(rng.randint(1, 60))]
+        _drive(pool, num_pages, max_slots, page_size, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 24), st.integers(1, 6), st.sampled_from([1, 2, 4]),
+           st.data())
+    def test_page_pool_property_no_double_ownership_no_leaks(
+            num_pages, max_slots, page_size, data):
+        mpps = data.draw(st.integers(1, num_pages), label="max_pages_per_slot")
+        pool = PagePool(num_pages, page_size, max_slots, mpps)
+        ops = data.draw(st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, max_slots - 1),
+                      st.integers(0, 64)), max_size=60), label="ops")
+        _drive(pool, num_pages, max_slots, page_size, ops)
+
+
+def test_page_pool_version_bumps_only_on_table_mutation():
+    """The engine keys its device page-table upload off ``version`` — a
+    decode step that maps no new page must not force a host transfer."""
+    pool = PagePool(num_pages=8, page_size=4, max_slots=2,
+                    max_pages_per_slot=4)
+    assert pool.reserve(0, 10)
+    v0 = pool.version
+    pool.ensure(0, 5)                                 # maps 2 pages
+    assert pool.version == v0 + 1
+    pool.ensure(0, 6)                                 # still 2 pages: no-op
+    assert pool.version == v0 + 1
+    pool.release(0)
+    assert pool.version == v0 + 2
+    assert pool.reserve(1, 4)
+    pool.release(1)                                   # held nothing: no-op
+    assert pool.version == v0 + 2
+
+
+def test_page_pool_reservation_gates_allocation():
+    pool = PagePool(num_pages=8, page_size=4, max_slots=4,
+                    max_pages_per_slot=4)
+    assert pool.reserve(0, 16)                        # 4 pages
+    assert pool.reserve(1, 13)                        # 4 pages (ceil)
+    assert not pool.reserve(2, 1)                     # pool fully committed
+    with pytest.raises(ValueError, match="reservation"):
+        pool.ensure(2, 4)                             # never reserved
+    with pytest.raises(ValueError, match="exceed"):
+        pool.ensure(0, 17)                            # beyond reservation
+    assert pool.ensure(0, 9) == [0, 1, 2]             # 3 pages, on demand
+    assert pool.ensure(0, 9) == []                    # idempotent
+    pool.release(0)
+    assert pool.reserve(2, 1)                         # freed commitment
+    with pytest.raises(ValueError, match="already holds"):
+        pool.reserve(2, 1)
+
+
+# ------------------------------------------------------- serving parity ----
+def _model(arch):
+    cfg = get_config(arch, smoke=True)
+    return cfg, T.lm_init(Ctx(random.key(0)), cfg)
+
+
+def _prompts(cfg, lens, seed=10):
+    return [list(map(int, random.randint(random.key(seed + i), (n,), 0,
+                                         cfg.vocab_size)))
+            for i, n in enumerate(lens)]
+
+
+@pytest.mark.parametrize("arch,decode_kernel", [
+    ("qwen2-1.5b", True),       # GQA + the paged split-KV kernel
+    ("gemma2-2b", False),       # local/global alternation + attn softcap
+    ("grok-1-314b", False),     # global softcap + MoE blocks
+])
+def test_paged_engine_bit_parity_with_contiguous_and_solo(arch,
+                                                          decode_kernel):
+    """The page pool is a memory-layout change, not a numerics change:
+    the paged engine must emit exactly the contiguous engine's tokens
+    (which PR 2 pinned to solo decode). num_pages is deliberately below
+    max_slots * max_pages_per_slot, so admission also has to wait for
+    pages released by finished requests."""
+    cfg, p = _model(arch)
+    prompts = _prompts(cfg, [5, 13, 3, 11, 7])  # chunk=4 ≪ longest prompt
+    budgets = [4, 6, 3, 5, 6]
+
+    scfg_paged = ServeConfig(max_seq=48, prefill_chunk=4, max_slots=3,
+                             paged_kv=True, page_size=4, num_pages=14,
+                             decode_kernel=decode_kernel, decode_kv_block=16)
+    assert scfg_paged.num_pages < 3 * scfg_paged.max_pages_per_slot
+    paged = ContinuousBatchingEngine(cfg, scfg_paged, p)
+    uids = [paged.submit(pr, mx) for pr, mx in zip(prompts, budgets)]
+    results = paged.run(max_steps=400)
+    assert sorted(results) == sorted(uids)
+    assert paged.pool.free_pages == scfg_paged.num_pages  # all returned
+
+    scfg_cont = ServeConfig(max_seq=48, prefill_chunk=4, max_slots=3,
+                            decode_kernel=decode_kernel, decode_kv_block=16)
+    cont = ContinuousBatchingEngine(cfg, scfg_cont, p)
+    cuids = [cont.submit(pr, mx) for pr, mx in zip(prompts, budgets)]
+    cresults = cont.run(max_steps=400)
+
+    alone = ServeSession(cfg, ServeConfig(max_seq=48), p)
+    for uid, cuid, pr, mx in zip(uids, cuids, prompts, budgets):
+        ref = np.asarray(alone.generate(jnp.asarray([pr], jnp.int32),
+                                        steps=mx))[0]
+        np.testing.assert_array_equal(np.asarray(results[uid]),
+                                      np.asarray(cresults[cuid]))
+        np.testing.assert_array_equal(np.asarray(results[uid]), ref)
+
+
+def test_paged_engine_one_compiled_shape_across_mixed_traffic():
+    """Mirror of PR 2's prefill_cache_size assertion, extended to decode:
+    across mixed-length admissions, ragged tails, recycles, and page-table
+    growth, the paged engine compiles exactly one prefill shape and one
+    decode shape — the table rides along as a value, never a shape."""
+    cfg, p = _model("qwen2-1.5b")
+    scfg = ServeConfig(max_seq=32, prefill_chunk=4, max_slots=2,
+                       paged_kv=True, page_size=2, num_pages=24)
+    eng = ContinuousBatchingEngine(cfg, scfg, p)
+    for pr, mx in zip(_prompts(cfg, [9, 2, 14, 1, 6], seed=30),
+                      [3, 1, 5, 2, 4]):
+        eng.submit(pr, mx)
+    results = eng.run(max_steps=400)
+    assert len(results) == 5
+    assert eng.prefill_cache_size == 1
+    assert eng.decode_cache_size == 1
+    assert eng.pool.free_pages == scfg.num_pages
+
+
+def test_paged_engine_pool_pressure_serializes_but_serves_all():
+    """A pool that fits one worst-case request at a time still drains the
+    queue — reservations serialize admissions instead of deadlocking."""
+    cfg, p = _model("qwen2-1.5b")
+    scfg = ServeConfig(max_seq=16, prefill_chunk=4, max_slots=3,
+                       paged_kv=True, page_size=4, num_pages=4)
+    eng = ContinuousBatchingEngine(cfg, scfg, p)
+    uids = [eng.submit(pr, 3) for pr in _prompts(cfg, [9, 8, 10], seed=40)]
+    results = eng.run(max_steps=400)
+    assert sorted(results) == sorted(uids)
+    assert all(len(results[u]) == 3 for u in uids)
+    assert eng.pool.free_pages == 4
+
+
+# ------------------------------------------------- construction checks ----
+def test_serve_config_rejects_prefill_chunk_above_max_seq():
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServeConfig(max_seq=32, prefill_chunk=64)
+
+
+def test_serve_config_default_prefill_chunk_resolves_to_max_seq():
+    assert ServeConfig(max_seq=48).prefill_chunk == 48
+    assert ServeConfig(max_seq=100_000).prefill_chunk == 2048
+
+
+def test_serve_config_rejects_page_size_not_dividing_prefill_chunk():
+    with pytest.raises(ValueError, match="page_size"):
+        ServeConfig(max_seq=64, prefill_chunk=8, paged_kv=True, page_size=3)
+    # page_size is unused (hence unvalidated) without paged_kv
+    ServeConfig(max_seq=64, prefill_chunk=8, page_size=3)
+
+
+def test_serve_config_rejects_undersized_pool():
+    with pytest.raises(ValueError, match="num_pages"):
+        ServeConfig(max_seq=64, prefill_chunk=8, paged_kv=True, page_size=8,
+                    num_pages=4)                      # < 8 pages for one slot
+
+
+def test_serve_config_paged_defaults_cover_all_slots():
+    scfg = ServeConfig(max_seq=60, prefill_chunk=8, paged_kv=True,
+                       page_size=8, max_slots=3)
+    assert scfg.max_pages_per_slot == 8               # ceil(60 / 8)
+    assert scfg.num_pages == 24
+
+
+def test_serve_session_rejects_paged_config():
+    cfg, p = _model("qwen2-1.5b")
+    with pytest.raises(NotImplementedError, match="paged"):
+        ServeSession(cfg, ServeConfig(max_seq=32, prefill_chunk=4,
+                                      paged_kv=True, page_size=4), p)
+
+
+# ----------------------------------------------------- paged kernel op ----
+def test_paged_decode_kernel_matches_jnp_paged_attention():
+    """Direct numeric check of the scalar-prefetch paged kernel against the
+    jnp paged row, across GQA + window + softcap."""
+    from repro.core.attention import paged_attention
+    from repro.kernels.consmax_decode.ops import consmax_decode_paged_op
+
+    b, H, hkv, dk, ps, P = 3, 4, 2, 32, 8, 10
+    key = random.key(0)
+    q = random.normal(random.fold_in(key, 1), (b, 1, H, dk)) * 0.3
+    kp = random.normal(random.fold_in(key, 2), (P, ps, hkv, dk))
+    vp = random.normal(random.fold_in(key, 3), (P, ps, hkv, dk))
+    table = jnp.asarray([[3, 1, -1, -1], [5, 0, 2, 7], [9, -1, -1, -1]],
+                        jnp.int32)
+    index = jnp.asarray([12, 27, 3])
+    beta = jnp.linspace(0.5, 2.5, H)
+    gamma = jnp.full((H,), 100.0)
+    params = {"beta": beta, "gamma": gamma}
+    for window, softcap in ((0, 0.0), (6, 0.0), (0, 30.0)):
+        ref = paged_attention(q, kp, vp, table, index,
+                              jnp.ones((b,), jnp.int32),
+                              norm_kind="consmax", norm_params=params,
+                              window=window, softcap=softcap, merged=True)
+        got = consmax_decode_paged_op(q, kp, vp, table, index + 1, beta,
+                                      gamma, window=window, softcap=softcap,
+                                      merged=True, scale=1.0)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(ref, np.float32), atol=1e-5)
