@@ -1,8 +1,8 @@
-"""Decode-path throughput: continuous batching vs the static batch, the
-split-KV consmax_decode kernel vs the jnp decode row, and the paged KV pool
-vs contiguous per-slot rows.
+"""Serving-path throughput: continuous batching vs the static batch, the
+fused prefill/decode ConSmax kernels vs the jnp walks, and the paged KV
+pool vs contiguous per-slot rows.
 
-Three measurements:
+Four measurements:
 
 * **engine** — a queue of heterogeneous requests (random prompt lengths and
   token budgets) served by (a) the static ``ServeSession`` (everyone padded
@@ -10,6 +10,10 @@ Three measurements:
   and (b) the slot-recycling ``ContinuousBatchingEngine``. Useful-token
   throughput counts only requested tokens, so static-batch padding waste
   shows up directly.
+* **prefill** — prompt tokens/s of a prefill-only queue (one-token budgets:
+  the first token samples from the final chunk's logits, so no decode step
+  ever runs), jnp KV walk vs the fused ``consmax_prefill`` kernel, on
+  contiguous rows and on the page pool.
 * **step** — wall time of one jitted decode step at a pinned cache length,
   jnp row attention vs the split-KV Pallas kernel (interpret mode on CPU;
   the kernel numbers are architecture-mirrors, not CPU speedups).
@@ -18,6 +22,12 @@ Three measurements:
   shape served from a page pool holding FEWER total KV cells than
   ``max_slots x max_seq`` — the HBM claim of the paged design, measured.
 
+Besides the CSV rows on stdout, the run writes ``BENCH_serve.json``
+(``--json-out``) — decode tok/s, prefill tok/s, decode-step latencies, the
+``long_500k`` step, and page occupancy in one machine-readable dict — so
+the serving perf trajectory is recorded per commit (CI uploads it as an
+artifact).
+
     PYTHONPATH=src python benchmarks/decode_throughput.py            # quick
     PYTHONPATH=src python benchmarks/decode_throughput.py --paged    # page pool
     PYTHONPATH=src python benchmarks/decode_throughput.py --full     # paper axes
@@ -25,6 +35,7 @@ Three measurements:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -98,10 +109,54 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
     return useful / dt, occ
 
 
-def _pin_index(caches, value):
-    return tree_map_with_path(
-        lambda p, a: jnp.full_like(a, value)
-        if getattr(p[-1], "key", None) == "index" else a, caches)
+def _prefill_step_tok_s(cfg, params, prefill_kernel, paged=False, chunk=8,
+                        max_seq=48, iters=20):
+    """Prompt tokens/s of ONE jitted append-prefill chunk step — the
+    engine's actual compiled hot path (``ContinuousBatchingEngine._prefill``,
+    jnp KV walk vs the fused consmax_prefill kernel), measured like the
+    decode ``step`` rows so host-side queue scheduling doesn't drown the
+    device-side difference. The slot's index is pinned to mid-fill before
+    every timed call (outside the window): a prefill chunk's job is
+    attending ``cache[0:index]`` + itself, so an empty cache would be the
+    least representative state. Best-of-N, like any microbenchmark."""
+    scfg = ServeConfig(max_seq=max_seq, prefill_chunk=chunk, max_slots=4,
+                       prefill_kernel=prefill_kernel, paged_kv=paged,
+                       page_size=chunk if paged else 256)
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    slot_i = 1
+    slot = jnp.asarray(slot_i, jnp.int32)
+    toks = jnp.zeros((1, chunk), jnp.int32)
+    lens = jnp.asarray([chunk], jnp.int32)
+    fill = (max_seq // 2) // chunk * chunk                 # chunk-aligned
+    pin = jax.jit(lambda c: _pin_index(c, fill, slot=slot_i))
+    tail = ()
+    if paged:
+        eng.pool.reserve(slot_i, fill + 2 * chunk)
+        eng.pool.ensure(slot_i, fill + chunk)
+        tail = (eng._device_table()[slot_i:slot_i + 1],)
+    caches = pin(eng.caches)
+    logits, caches = eng._prefill(params, caches, slot, toks, lens,
+                                  *tail)                   # compile
+    ts = []
+    for _ in range(iters):
+        caches = pin(caches)                               # back to mid-fill
+        t0 = time.perf_counter()
+        logits, caches = eng._prefill(params, caches, slot, toks, lens,
+                                      *tail)
+        jax.block_until_ready(logits)
+        ts.append(time.perf_counter() - t0)
+    best = float(np.min(ts))
+    return chunk / best, best * 1e6
+
+
+def _pin_index(caches, value, slot=None):
+    """Set cache ``index`` leaves to ``value`` — every slot, or just one."""
+    def pin(p, a):
+        if getattr(p[-1], "key", None) != "index":
+            return a
+        return (jnp.full_like(a, value) if slot is None
+                else a.at[:, slot].set(value))
+    return tree_map_with_path(pin, caches)
 
 
 def _step_us(cfg, params, batch, cache_len, decode_kernel):
@@ -113,7 +168,7 @@ def _step_us(cfg, params, batch, cache_len, decode_kernel):
     return bench_wall(fn, params, caches, {"tokens": toks}, iters=3, warmup=1)
 
 
-def _paged_long_step(cfg, params, rows):
+def _paged_long_step(cfg, params, rows, report):
     """One decode step of the long_500k shape against a page pool that holds
     FEWER total KV cells than the contiguous max_slots x max_seq block —
     the acceptance shape of the paged design. Slot 0 sits at full 500k
@@ -146,13 +201,20 @@ def _paged_long_step(cfg, params, rows):
     rows.append(("serve/paged_long500k_step_us", f"{us:.0f}",
                  f"cells={total_cells};contiguous={contiguous_cells};"
                  f"saving={1 - total_cells/contiguous_cells:.2%}"))
+    report["long_500k_step_us"] = us
+    report["long_500k_cells"] = {"paged": total_cells,
+                                 "contiguous": contiguous_cells}
 
 
 def run(arch="qwen2-1.5b", *, full=False, paged=False,
-        out_dir="artifacts/bench"):
+        json_out="BENCH_serve.json"):
     cfg = get_config(arch, smoke=True)
     params = T.lm_init(Ctx(random.key(0)), cfg)
     rows = []
+    report = {"arch": arch, "mode": "full" if full else "quick",
+              "paged": paged, "decode_tok_s": {}, "prefill_tok_s": {},
+              "decode_step_us": {}, "page_occupancy": {},
+              "long_500k_step_us": None}
 
     # ---- engine: static vs continuous on the same request queue ----
     batches = (1, 8, 64) if full else (1, 4, 8)
@@ -172,6 +234,9 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
                      f"slots={slots};split_kv"))
         rows.append((f"serve/continuous_b{n}_speedup", f"{co/st:.3f}x",
                      "vs_static_useful"))
+        report["decode_tok_s"][f"static_b{n}"] = st
+        report["decode_tok_s"][f"continuous_b{n}"] = co
+        report["decode_tok_s"][f"continuous_kernel_b{n}"] = ck
         if paged:
             pg, occ = _continuous_toks_per_s(cfg, params, reqs, max_seq,
                                              slots, False, paged=True)
@@ -179,6 +244,24 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
                          f"slots={slots};peak_occupancy={occ:.2f}"))
             rows.append((f"serve/paged_b{n}_vs_contiguous", f"{pg/co:.3f}x",
                          "same_queue"))
+            report["decode_tok_s"][f"paged_b{n}"] = pg
+            report["page_occupancy"][f"engine_b{n}_peak"] = occ
+
+    # ---- prefill: chunked append step tok/s, jnp KV walk vs fused kernel ----
+    # chunk 128 against a 1024-row cache at mid-fill: big enough that the
+    # attention walk (not the smoke model's MLP/unembed) dominates the step
+    for label, pg in (("contiguous", False),) + ((("paged", True),)
+                                                 if paged else ()):
+        jn, jn_us = _prefill_step_tok_s(cfg, params, False, paged=pg,
+                                        chunk=128, max_seq=1024)
+        kr, kr_us = _prefill_step_tok_s(cfg, params, True, paged=pg,
+                                        chunk=128, max_seq=1024)
+        rows.append((f"serve/prefill_{label}_jnp_tok_s", f"{jn:.1f}",
+                     f"chunk=128;L=1024;step={jn_us:.0f}us"))
+        rows.append((f"serve/prefill_{label}_kernel_tok_s", f"{kr:.1f}",
+                     f"step={kr_us:.0f}us;{kr/jn:.3f}x_vs_jnp_walk"))
+        report["prefill_tok_s"][f"{label}_jnp"] = jn
+        report["prefill_tok_s"][f"{label}_kernel"] = kr
 
     # ---- step: decode latency vs cache length, jnp row vs split-KV ----
     cache_lens = (1024, 8192, 32768) if full else (1024, 4096)
@@ -191,10 +274,16 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
                          f"{1e6*b/us_row:.1f}tok_s"))
             rows.append((f"serve/step_L{L}_b{b}_splitkv_us", f"{us_ker:.0f}",
                          f"{1e6*b/us_ker:.1f}tok_s;interpret_on_cpu"))
+            report["decode_step_us"][f"L{L}_b{b}_row"] = us_row
+            report["decode_step_us"][f"L{L}_b{b}_splitkv"] = us_ker
 
     # ---- paged: the long_500k shape on a sub-contiguous page pool ----
     if paged:
-        _paged_long_step(cfg, params, rows)
+        _paged_long_step(cfg, params, rows, report)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        rows.append(("serve/bench_json", json_out, "machine_readable"))
     emit(rows)
     return rows
 
@@ -208,6 +297,8 @@ if __name__ == "__main__":
                     help="paged-KV rows: paged vs contiguous engine tok/s "
                          "+ occupancy, and one long_500k decode step on a "
                          "page pool smaller than max_slots x max_seq cells")
+    ap.add_argument("--json-out", default="BENCH_serve.json",
+                    help="machine-readable report path ('' disables)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.arch, full=args.full, paged=args.paged)
+    run(args.arch, full=args.full, paged=args.paged, json_out=args.json_out)

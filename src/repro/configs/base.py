@@ -156,6 +156,17 @@ class ServeConfig:
                                      # (0 = one prefill_chunk per iteration)
     decode_kernel: bool = False      # split-KV consmax_decode Pallas kernel
     decode_kv_block: int = 256       # KV shard size for the split-KV kernel
+    prefill_kernel: bool = False     # fused consmax_prefill Pallas kernel
+                                     # for append-at-index prefill chunks
+                                     # (contiguous and paged)
+    prefill_kv_block: int = 512      # KV shard size for the prefill kernel
+                                     # grid (contiguous caches)
+    score_norm: Optional[str] = None # the served model's score_norm, when
+                                     # known at config time: lets the kernel
+                                     # flags fail at CONSTRUCTION on a
+                                     # softmax/softermax arch (make_serve_fns
+                                     # re-checks against the real ModelConfig
+                                     # either way)
     # --- paged KV (shared page pool across slots) ---
     paged_kv: bool = False           # slots map logical rows onto pool pages
     page_size: int = 256             # KV rows per page (must divide
@@ -181,6 +192,22 @@ class ServeConfig:
                 f"ServeConfig: prefill_chunk ({self.prefill_chunk}) exceeds "
                 f"max_seq ({self.max_seq}) — an append chunk could not fit "
                 "a slot's KV rows")
+        if self.prefill_kv_block <= 0 or self.decode_kv_block <= 0:
+            raise ValueError(
+                f"ServeConfig: prefill_kv_block ({self.prefill_kv_block}) "
+                f"and decode_kv_block ({self.decode_kv_block}) must be "
+                "positive")
+        if self.score_norm is not None and self.score_norm != "consmax":
+            flags = [name for name, on in (("decode_kernel",
+                                            self.decode_kernel),
+                                           ("prefill_kernel",
+                                            self.prefill_kernel)) if on]
+            if flags:
+                verb = "require" if len(flags) > 1 else "requires"
+                raise ValueError(
+                    f"ServeConfig: {' and '.join(flags)} {verb} "
+                    f"score_norm='consmax' (got {self.score_norm!r}): the "
+                    "fused serving kernels have no softmax/softermax path")
         if self.paged_kv:
             if self.page_size <= 0:
                 raise ValueError(

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import normalizers
 from repro.distributed.sharding import shard
+from repro.kernels.cache_layout import kv_mask
 from repro.nn import layers as L
 from repro.nn import rope as R
 
@@ -230,10 +231,9 @@ def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
         if softcap > 0:
             s = softcap * jnp.tanh(s / softcap)
         kpos = j * kc + jnp.arange(kc)
-        msk = kpos[None, None, :] < kv_len[:, None, None]    # (b, c, kc)
-        msk &= qpos[:, :, None] >= kpos[None, None, :]
-        if window > 0:
-            msk &= (qpos[:, :, None] - kpos[None, None, :]) < window
+        # the one serving mask formula, shared with the Pallas kernels
+        msk = kv_mask(qpos[:, :, None], kpos[None, None, :],
+                      kv_len[:, None, None], window)          # (b, c, kc)
         return s, v_blk.astype(cdt), msk
 
     if norm_kind == "consmax":
@@ -382,9 +382,8 @@ def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     kpos = jnp.arange(L_)
-    msk = kpos[None, :] <= index[:, None]                   # (b, L)
-    if window > 0:
-        msk &= (index[:, None] - kpos[None, :]) < window
+    msk = kv_mask(index[:, None], kpos[None, :],
+                  index[:, None] + 1, window)               # (b, L)
     s = s.reshape(b, H, 1, L_)
     msk = msk[:, None, None, :]
     p = normalizers.apply_norm(norm_kind, norm_params, s, msk,
@@ -400,6 +399,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     positions=None, cache=None, cond=None, merged=False,
                     q_chunk: int = 2048, kv_chunk: int = 1024,
                     decode_kernel: bool = False, decode_kv_block: int = 256,
+                    prefill_kernel: bool = False, prefill_kv_block: int = 512,
                     prefill_append=None, decode_active=None, page_table=None):
     """Self- or cross-attention over x: (b, s, d).
 
@@ -407,6 +407,9 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     cond:  (b, n_cond, d) conditioning stream for cross-attention.
     decode_kernel: route one-token consmax decode through the split-KV
     Pallas kernel (kernels/consmax_decode) instead of decode_attention.
+    prefill_kernel: route chunked consmax append prefill (contiguous and
+    paged) through the fused Pallas kernel (kernels/consmax_prefill)
+    instead of the jnp KV walk; ``prefill_kv_block`` sizes its KV shards.
     prefill_append: (b,) int32 — chunked prefill: x is a fixed-size chunk
     appended at the cache's per-slot ``index``; the entry gives the real
     (non-pad) token count per slot. Pad rows' K/V are zeroed before the
@@ -467,7 +470,19 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
         # pad rows / inactive slots are dropped by the scatter itself
         kp = _paged_cache_write(cache["k"], k, idx, lengths, page_table)
         vp = _paged_cache_write(cache["v"], v, idx, lengths, page_table)
-        if (prefill_append is None and decode_kernel
+        if (prefill_append is not None and prefill_kernel
+                and cfg.score_norm == "consmax"):
+            # fused paged prefill kernel: walks page-table entries via
+            # scalar prefetch; pool consumed in cache layout, q pre-scaled
+            from repro.kernels.consmax_prefill.ops import (
+                consmax_prefill_paged_op)
+            out = consmax_prefill_paged_op(
+                q, kp, vp, page_table, idx, lengths,
+                jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
+                jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
+                window=window, softcap=cfg.attn_softcap, merged=merged,
+                scale=1.0)
+        elif (prefill_append is None and decode_kernel
                 and cfg.score_norm == "consmax"):
             from repro.kernels.consmax_decode.ops import consmax_decode_paged_op
             out = consmax_decode_paged_op(
@@ -501,11 +516,23 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
         v_cache = _append_cache_write(cache["v"], v, idx)
         k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
         v_cache = shard(v_cache, "act_batch,act_kv_seq,act_kv_heads,")
-        out = append_attention(
-            q, k_cache.astype(cdt), v_cache.astype(cdt), idx, lengths,
-            norm_kind=cfg.score_norm, norm_params=p["score_norm"],
-            window=window, softcap=cfg.attn_softcap, merged=merged,
-            kv_chunk=kv_chunk)
+        if prefill_kernel and cfg.score_norm == "consmax":
+            # fused append-prefill kernel: cache consumed in its stored
+            # (b, L, hkv, dk) layout (no transpose/astype copy), KV grid
+            # axis fully parallel, partials combined by pure addition
+            from repro.kernels.consmax_prefill.ops import consmax_prefill_op
+            out = consmax_prefill_op(
+                q, k_cache, v_cache, idx, lengths,
+                jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
+                jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
+                window=window, softcap=cfg.attn_softcap, merged=merged,
+                scale=1.0, bk=prefill_kv_block)
+        else:
+            out = append_attention(
+                q, k_cache.astype(cdt), v_cache.astype(cdt), idx, lengths,
+                norm_kind=cfg.score_norm, norm_params=p["score_norm"],
+                window=window, softcap=cfg.attn_softcap, merged=merged,
+                kv_chunk=kv_chunk)
         new_cache = {"k": k_cache, "v": v_cache, "index": idx + lengths}
     elif cache is None or s > 1:
         # training, or whole-prompt prefill (cache is filled afterwards)
@@ -565,10 +592,12 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
             k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
             v_cache = shard(v_cache, "act_batch,act_kv_seq,act_kv_heads,")
             if decode_kernel and cfg.score_norm == "consmax":
-                # split-KV Pallas kernel; q is already pre-scaled above
+                # split-KV Pallas kernel; q is already pre-scaled above and
+                # the cache is consumed in its stored layout/dtype (per-
+                # block casts inside the kernel, no full-cache copy)
                 from repro.kernels.consmax_decode.ops import consmax_decode_op
                 out = consmax_decode_op(
-                    q, k_cache.astype(cdt), v_cache.astype(cdt), idx,
+                    q, k_cache, v_cache, idx,
                     jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                     jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                     window=window, softcap=cfg.attn_softcap, merged=merged,

@@ -1,0 +1,111 @@
+"""Shared layout / masking helpers for the serving-path ConSmax kernels.
+
+The decode (``consmax_decode``) and prefill (``consmax_prefill``) kernels
+block the model's KV-cache layout ``(b, L, hkv, dk)`` (or the page pool's
+``(P, ps, hkv, dk)``) *directly* — the hkv axis is a unit grid dimension in
+the BlockSpec, so no per-step ``swapaxes`` copy of the cache is ever
+materialized. Everything both kernel families agree on lives here:
+
+* ``divisor_block`` — pick a block size that tiles the cache axis exactly,
+  so blocking never needs a full-cache ``jnp.pad`` copy either.
+* ``fold_gqa`` / ``unfold_gqa`` — fold the g = H/hkv query heads that share
+  one KV head into the q rows (row = position * g + group-head, i.e.
+  position-major), so a chunk's score tile is ``(c*g, bk)``-shaped for the
+  MXU without materializing repeated K/V.
+* ``tile_head_params`` — per-row beta/gamma matching that folding.
+* ``kv_mask`` — the one causal/length/window mask formula shared by the
+  kernels and the jnp walks (``core.attention._kv_walk``): a query at
+  absolute position ``qpos`` sees cache row ``kpos`` iff ``kpos < kv_len``,
+  ``qpos >= kpos`` and (local layers) ``qpos - kpos < window``.
+* ``consmax_weights`` — Eq. 2 / merged Eq. 3 of the paper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def divisor_block(n: int, bk: int) -> int:
+    """Largest block size <= ``bk`` that divides ``n`` exactly.
+
+    Used instead of padding: padding a cache-sized operand to a block
+    multiple would copy the whole cache every step, which is exactly what
+    the cache-layout kernels exist to avoid. Serving shapes (max_seq,
+    prefill_chunk, page_size) are block-friendly powers of two; odd
+    standalone shapes degrade to a smaller block, not to a copy.
+    """
+    bk = max(1, min(bk, n))
+    while n % bk:
+        bk -= 1
+    return bk
+
+
+def block_cache_rows(k, v, bk: int):
+    """Choose the KV row-block size for a (b, L, hkv, dk) cache (or
+    anything blocked along axis 1) and return ``(k, v, bk_eff, n_blocks)``.
+
+    Prefers a divisor of L (no copy — the serving hot path, where L is a
+    block-friendly power of two). Only when the best divisor is degenerate
+    (< 8 rows: prime/awkward standalone L, where (g, 1)-shaped tiles and an
+    L-program grid would be far worse than one copy) does it fall back to
+    padding L up to a ``bk`` multiple; padded rows sit at kpos >= kv_len
+    and are masked to exact zeros by ``kv_mask``.
+    """
+    L = k.shape[1]
+    bk_eff = divisor_block(L, bk)
+    if bk_eff == min(bk, L) or bk_eff >= 8:
+        return k, v, bk_eff, L // bk_eff
+    nb = -(-L // bk)
+    pad = ((0, 0), (0, nb * bk - L), (0, 0), (0, 0))
+    return jnp.pad(k, pad), jnp.pad(v, pad), bk, nb
+
+
+def fold_gqa(q: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """(b, c, H, dk) queries -> (b, hkv, c*g, dk), position-major rows.
+
+    Row ``r`` of KV head ``h`` holds query head ``h*g + r % g`` at chunk
+    position ``r // g`` — so a contiguous row block is a contiguous span of
+    chunk positions (q-axis grid blocking stays a plain BlockSpec index).
+    Only the chunk is transposed; the cache never is.
+    """
+    b, c, H, dk = q.shape
+    g = H // hkv
+    return q.reshape(b, c, hkv, g, dk).swapaxes(1, 2).reshape(
+        b, hkv, c * g, dk)
+
+
+def unfold_gqa(out: jnp.ndarray, b: int, c: int, H: int) -> jnp.ndarray:
+    """(b, hkv, c*g, dk) kernel output -> (b, c, H, dk)."""
+    hkv, dk = out.shape[1], out.shape[-1]
+    g = H // hkv
+    return out.reshape(b, hkv, c, g, dk).swapaxes(1, 2).reshape(b, c, H, dk)
+
+
+def tile_head_params(beta: jnp.ndarray, gamma: jnp.ndarray, hkv: int,
+                     c: int = 1) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(H,) per-head beta/gamma -> (hkv, c*g) rows matching ``fold_gqa``."""
+    g = beta.shape[0] // hkv
+
+    def tile(p):
+        p = p.reshape(hkv, 1, g).astype(jnp.float32)
+        return jnp.broadcast_to(p, (hkv, c, g)).reshape(hkv, c * g)
+
+    return tile(beta), tile(gamma)
+
+
+def kv_mask(qpos, kpos, kv_len, window: int):
+    """The serving-path attention mask, shared verbatim by the Pallas
+    kernels and the jnp KV walks: causal vs the absolute query position,
+    bounded by the slot's valid-row count, optionally sliding-window."""
+    mask = (kpos < kv_len) & (qpos >= kpos)
+    if window > 0:
+        mask = mask & ((qpos - kpos) < window)
+    return mask
+
+
+def consmax_weights(s, beta, gamma, merged: bool):
+    """ConSmax score weights: Eq. 2 (training form) or the merged
+    inference constant C = e^{-beta}/gamma (Eq. 3). ``beta``/``gamma``
+    broadcast against the fp32 score tile ``s``."""
+    if merged:
+        return jnp.exp(-beta) / gamma * jnp.exp(s)
+    return jnp.exp(s - beta) / gamma

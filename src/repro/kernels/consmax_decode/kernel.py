@@ -1,16 +1,24 @@
 """Split-KV ConSmax decode Pallas kernel (TPU target).
 
 Single-query-token attention against a long KV cache, the serving hot path.
-Where the prefill kernel (../consmax_attn) walks KV blocks *sequentially*
-(grid trailing dim 'arbitrary', fp32 accumulator carried across iterations),
-this kernel exploits the paper's sync-free property one step further: with no
-running max and no denominator sum, the partial ``p @ v`` contribution of
-every KV shard is *independent*, so the KV axis of the grid is marked
-``parallel`` like everything else. Each program writes its shard's partial
-into its own output slot and the shards combine by a plain fp32 addition
-outside the kernel — no rescale pass, no (m, l) exchange, no cross-shard
-ordering. This is the decode-time analogue of flash-decoding's split-KV, but
-without the log-sum-exp combine step softmax forces.
+Where the training-time attention kernel (../consmax_attn) walks KV blocks
+*sequentially* (grid trailing dim 'arbitrary', fp32 accumulator carried
+across iterations), this kernel exploits the paper's sync-free property one
+step further: with no running max and no denominator sum, the partial
+``p @ v`` contribution of every KV shard is *independent*, so the KV axis of
+the grid is marked ``parallel`` like everything else. Each program writes its
+shard's partial into its own output slot and the shards combine by a plain
+fp32 addition outside the kernel — no rescale pass, no (m, l) exchange, no
+cross-shard ordering. This is the decode-time analogue of flash-decoding's
+split-KV, but without the log-sum-exp combine step softmax forces.
+
+Both variants block the model's cache layout **directly** — contiguous
+``(b, L, hkv, dk)`` rows or the shared ``(P, ps, hkv, dk)`` page pool — with
+the hkv axis as a unit grid dimension in the BlockSpec, so a decode step
+never materializes a transposed (or padded) copy of the cache. The block
+size is chosen by ``cache_layout.divisor_block`` to tile L exactly. Layout
+folding, the mask formula, and the ConSmax weights are shared with the
+prefill kernel via ``kernels/cache_layout.py``.
 
 Per (batch, kv-head, kv-shard) program:
 
@@ -37,6 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
+from repro.kernels import cache_layout as CL
 
 
 def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
@@ -45,8 +54,8 @@ def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
     ik = pl.program_id(2)
 
     q = q_ref[0, 0]                                  # (g, d)
-    k = k_ref[0, 0]                                  # (bk, d)
-    v = v_ref[0, 0]
+    k = k_ref[0, :, 0].astype(q.dtype)               # (bk, d) — cache layout
+    v = v_ref[0, :, 0].astype(q.dtype)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     if softcap > 0:
@@ -54,16 +63,10 @@ def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
 
     n = len_ref[0, 0]                                # valid kv count (<= L)
     kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
-    mask = kpos < n
-    if window > 0:
-        mask &= (n - 1 - kpos) < window
+    mask = CL.kv_mask(n - 1, kpos, n, window)        # decode row sits at n-1
 
-    beta = beta_ref[0][:, None]                      # (g, 1)
-    gamma = gamma_ref[0][:, None]
-    if merged:
-        p = jnp.exp(-beta) / gamma * jnp.exp(s)      # Eq. 3 (C merged)
-    else:
-        p = jnp.exp(s - beta) / gamma                # Eq. 2
+    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                           merged)
     p = jnp.where(mask, p, 0.0)
 
     o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
@@ -75,27 +78,27 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
                    softcap: float = 0.0, merged: bool = True,
                    scale: float | None = None, bk: int = 256,
                    interpret: bool = False):
-    """q: (b, nh, d); k, v: (b, nkv, L, d); lengths: (b,) int32 valid counts;
-    beta/gamma: (nh,) fp32. Returns (b, nh, d) in q.dtype.
+    """q: (b, nh, d); k, v: (b, L, hkv, d) — the model's cache layout,
+    consumed as-is; lengths: (b,) int32 valid counts; beta/gamma: (nh,)
+    fp32. Returns (b, nh, d) in q.dtype.
 
-    Grid (b, nkv, n_shards) — ALL dims parallel. Shard partials are summed
+    Grid (b, hkv, n_shards) — ALL dims parallel. Shard partials are summed
     in fp32 by the caller-side reduction below (a pure addition; the absence
-    of a softmax combine step is the point).
+    of a softmax combine step is the point). The shard size is the largest
+    divisor of L <= ``bk``, so serving shapes are never padded (padding,
+    like the old (b, hkv, L, d) transpose, would copy the full cache every
+    step); only a degenerate-divisor L (prime-ish standalone shapes) falls
+    back to one padded copy — see ``cache_layout.block_cache_rows``.
     """
     b, nh, d = q.shape
-    nkv, L = k.shape[1], k.shape[2]
-    g = nh // nkv
+    hkv = k.shape[2]
+    g = nh // hkv
     if scale is None:
         scale = 1.0 / math.sqrt(d)
-    bk = min(bk, L)
-    ns = -(-L // bk)
-    if ns * bk != L:                                 # pad; masked via lengths
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, ns * bk - L), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, ns * bk - L), (0, 0)))
+    k, v, bk, ns = CL.block_cache_rows(k, v, bk)
 
-    qg = q.reshape(b, nkv, g, d)
-    beta2 = beta.reshape(nkv, g).astype(jnp.float32)
-    gamma2 = gamma.reshape(nkv, g).astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, d)
+    beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv)
     len2 = lengths.reshape(b, 1).astype(jnp.int32)
 
     kernel = functools.partial(_kernel, scale=scale, window=window,
@@ -103,19 +106,19 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
 
     partials = pl.pallas_call(
         kernel,
-        grid=(b, nkv, ns),
+        grid=(b, hkv, ns),
         in_specs=[
             pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
                          memory_space=pltpu.SMEM),                  # lengths
             pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # beta
             pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # gamma
             pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, ik: (ib, ih, ik, 0)),
-            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, ik: (ib, ih, ik, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, 1, g, d),
                                lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, nkv, ns, g, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
@@ -141,16 +144,10 @@ def _paged_kernel(tab_ref, len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
 
     n = len_ref[ib]                                  # valid logical rows
     kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
-    mask = kpos < n                                  # unmapped page => all
-    if window > 0:                                   # kpos >= n => zeroed
-        mask &= (n - 1 - kpos) < window
-
-    beta = beta_ref[0][:, None]                      # (g, 1)
-    gamma = gamma_ref[0][:, None]
-    if merged:
-        p = jnp.exp(-beta) / gamma * jnp.exp(s)      # Eq. 3 (C merged)
-    else:
-        p = jnp.exp(s - beta) / gamma                # Eq. 2
+    mask = CL.kv_mask(n - 1, kpos, n, window)        # unmapped page => all
+                                                     # kpos >= n => zeroed
+    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                           merged)
     p = jnp.where(mask, p, 0.0)
 
     o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
@@ -183,8 +180,7 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
         scale = 1.0 / math.sqrt(d)
 
     qg = q.reshape(b, nkv, g, d)
-    beta2 = beta.reshape(nkv, g).astype(jnp.float32)
-    gamma2 = gamma.reshape(nkv, g).astype(jnp.float32)
+    beta2, gamma2 = CL.tile_head_params(beta, gamma, nkv)
     tab = page_table.astype(jnp.int32)
     len1 = lengths.astype(jnp.int32)
 

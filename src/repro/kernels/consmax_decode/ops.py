@@ -1,7 +1,9 @@
-"""Jitted public wrapper for the split-KV ConSmax decode kernel.
+"""Jitted public wrappers for the split-KV ConSmax decode kernel.
 
-Adapts the model's decode layout — q (b, 1, H, dk), cache k/v (b, L, hkv, dk),
-per-slot cache ``index`` (b,) — to the kernel's (b, h, seq, d) layout. The
+Both kernels consume the model's cache layout — q (b, 1, H, dk), cache k/v
+(b, L, hkv, dk) (or the (P, ps, hkv, dk) page pools), per-slot cache
+``index`` (b,) — directly: the hkv axis is blocked inside the kernel grid,
+so a decode step never pays a full-cache ``swapaxes`` (or pad) copy. The
 valid-kv count per slot is ``index + 1`` (the current token's k/v is written
 into the cache before attention). On CPU (this container) the kernel body
 executes in interpret mode; on a real TPU backend it compiles through Mosaic.
@@ -24,19 +26,17 @@ def _on_cpu() -> bool:
                                    "bk", "interpret"))
 def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
                       merged=True, scale=None, bk=256, interpret=None):
-    """q: (b, 1, H, dk); k, v: (b, L, hkv, dk); index: (b,) current position.
+    """q: (b, 1, H, dk); k, v: (b, L, hkv, dk) — the cache, consumed in its
+    stored layout (the kernel blocks the hkv axis, so no per-step transpose
+    copy); index: (b,) current position.
 
     Returns (b, 1, H, dk) in q.dtype. ``scale=1.0`` when q is pre-scaled
     (the model path); None applies 1/sqrt(dk) (the standalone convention).
     """
     interp = _on_cpu() if interpret is None else interpret
-    b, _, H, dk = q.shape
-    qt = q[:, 0]                                     # (b, H, dk)
-    kt = k.swapaxes(1, 2)                            # (b, hkv, L, dk)
-    vt = v.swapaxes(1, 2)
-    out = consmax_decode(qt, kt, vt, index + 1, beta, gamma, window=window,
-                         softcap=softcap, merged=merged, scale=scale, bk=bk,
-                         interpret=interp)
+    out = consmax_decode(q[:, 0], k, v, index + 1, beta, gamma,
+                         window=window, softcap=softcap, merged=merged,
+                         scale=scale, bk=bk, interpret=interp)
     return out[:, None]
 
 

@@ -1,0 +1,270 @@
+"""Fused ConSmax append-at-index prefill Pallas kernel (TPU target).
+
+The serving prefill hot path: a fixed-size ``(b, c)`` token chunk whose K/V
+were just written at per-slot cache position ``index`` attends to
+``cache[0:index]`` plus its own causal self-block. This is the Pallas-tiled
+version of ``core.attention.append_attention``'s jnp KV walk, and the chunk
+analogue of the split-KV decode kernel next door (../consmax_decode): with
+no running max and no denominator sum, every KV shard's ``p @ v`` partial is
+*independent*, so the KV axis of the grid is marked ``parallel`` like every
+other dimension. Each program writes its shard's partial into its own
+output slot and the shards combine by one plain fp32 addition outside the
+kernel — no online-softmax rescale state between KV blocks, no (m, l)
+exchange, no final divide. That a multi-row prefill chunk needs *nothing*
+beyond what single-token decode needs is the paper's sync-free property
+doing the work.
+
+The cache is consumed in its stored layout ``(b, L, hkv, dk)`` — the hkv
+axis is a unit grid dimension in the BlockSpec (shared design with the
+decode kernel, helpers in ../cache_layout.py), so a prefill chunk never
+materializes a transposed or padded copy of the cache. GQA is folded into
+the q rows position-major (row = chunk position * g + group head), giving a
+``(bq*g, bk)`` score tile for the MXU without repeating K/V.
+
+Per (batch, kv-head, q-block, kv-shard) program:
+
+    s = q @ k^T * scale            (MXU; q is a bq*g row block)
+    p = exp(s - beta) / gamma      (VPU; causal/length/window mask)
+    o = p @ v                      (MXU; partial, summed across shards)
+
+VMEM per program @ (bq*g, bk, d) = (1024, 512, 128) fp32: q + out
+2·1024·128·4 + k/v 2·512·128·4 + s/p 2·1024·512·4 ≈ 5.8 MB — inside the
+~16 MB/core budget with Mosaic's double-buffered KV pipeline. The parallel
+split costs ``ns`` output-sized fp32 partial buffers in HBM; pick ``bk``
+(ServeConfig.prefill_kv_block) so ns = L/bk stays small on long caches.
+
+The paged variant walks *page-table entries* via a scalar-prefetch operand
+(mirroring ``consmax_decode_paged``): program (ib, ih, iq, ij) DMAs pool
+page ``page_table[ib, ij]`` straight from HBM. Its page axis accumulates
+into VMEM scratch ('arbitrary' trailing dim) instead of per-page partial
+buffers: a chunk's partials are (c*g, d)-sized, so per-page slots would
+cost max_pages_per_slot × chunk-output HBM — at 500k context that is
+thousands of copies, defeating the page pool's memory saving. The
+accumulation is still a bare ``acc += p @ v``: ConSmax removes the (m, l)
+rescale that softmax would thread between pages, which is what keeps the
+fused page walk this simple.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
+from repro.kernels import cache_layout as CL
+
+# ceiling on the contiguous kernel's parallel KV split: each shard owns a
+# chunk-output-sized fp32 partial buffer, so ns must stay O(10), not O(L/bk)
+MAX_KV_SHARDS = 64
+
+
+def _kernel(idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
+            o_ref, *, scale: float, window: int, softcap: float, bqg: int,
+            bk: int, g: int, merged: bool):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    q = q_ref[0, 0]                                  # (bqg, d)
+    k = k_ref[0, :, 0].astype(q.dtype)               # (bk, d) — cache layout
+    v = v_ref[0, :, 0].astype(q.dtype)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    idx = idx_ref[0, 0]                              # chunk start position
+    kvl = kvl_ref[0, 0]                              # index + real length
+    row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 0)
+    qpos = idx + row // g                            # position-major rows
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 1)
+    mask = CL.kv_mask(qpos, kpos, kvl, window)
+
+    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                           merged)
+    p = jnp.where(mask, p, 0.0)
+
+    o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
+                    softcap: float = 0.0, merged: bool = True,
+                    scale: float | None = None, bq: int = 128, bk: int = 512,
+                    interpret: bool = False):
+    """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
+    k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
+    ``index`` (consumed as stored — no transpose); index, lengths: (b,)
+    int32 chunk start positions / real (non-pad) chunk lengths; beta/gamma:
+    (H,) fp32. Returns (b, c, H, dk) in q.dtype.
+
+    Grid (b, hkv, nq, ns) — ALL dims parallel; shard partials are summed in
+    fp32 by the caller-side reduction (pure addition, the sync-free
+    combine). Query rows >= lengths are pad rows: their output is garbage
+    and must be ignored by the caller (their K/V never entered the cache),
+    exactly as in ``append_attention``. Block sizes prefer the largest
+    divisors of c / L <= ``bq`` / ``bk`` so operands are not padded
+    (``cache_layout.block_cache_rows`` handles degenerate-divisor L); the
+    shard count is additionally capped at ``MAX_KV_SHARDS`` by growing the
+    shard — the parallel split buys its independence with ``ns``
+    chunk-output-sized fp32 partial buffers, and an uncapped ns at 500k
+    context would cost ~1000x the chunk output in HBM.
+    """
+    b, c, H, dk = q.shape
+    L, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dk)
+    bq = CL.divisor_block(c, bq)
+    bqg = bq * g
+    nq = c // bq
+    k, v, bk, ns = CL.block_cache_rows(
+        k, v, max(bk, -(-L // MAX_KV_SHARDS)))
+
+    qf = CL.fold_gqa(q, hkv)                         # (b, hkv, c*g, dk)
+    beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv, c)
+    idx2 = index.reshape(b, 1).astype(jnp.int32)
+    kvl2 = (index + lengths).reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               softcap=softcap, bqg=bqg, bk=bk, g=g,
+                               merged=merged)
+
+    partials = pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nq, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
+                         memory_space=pltpu.SMEM),                  # index
+            pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
+                         memory_space=pltpu.SMEM),                  # kv_len
+            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # beta
+            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # gamma
+            pl.BlockSpec((1, 1, bqg, dk),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),   # q rows
+            pl.BlockSpec((1, bk, 1, dk),
+                         lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # k shard
+            pl.BlockSpec((1, bk, 1, dk),
+                         lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # v shard
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, bqg, dk),
+                               lambda ib, ih, iq, ik: (ib, ih, ik, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, ns, c * g, dk), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel")),
+    )(idx2, kvl2, beta2, gamma2, qf, k, v)
+
+    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    return CL.unfold_gqa(out, b, c, H).astype(q.dtype)
+
+
+# ------------------------------------------------------------- paged KV ----
+def _paged_kernel(tab_ref, idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref,
+                  k_ref, v_ref, o_ref, acc_ref, *, scale: float, window: int,
+                  softcap: float, bqg: int, ps: int, g: int, merged: bool):
+    ib, iq, ij = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    nj = pl.num_programs(3)
+
+    @pl.when(ij == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                  # (bqg, d)
+    k = k_ref[0, :, 0].astype(q.dtype)               # (ps, d) — one page
+    v = v_ref[0, :, 0].astype(q.dtype)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    idx = idx_ref[ib]
+    kvl = kvl_ref[ib]
+    row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 0)
+    qpos = idx + row // g
+    kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 1)
+    mask = CL.kv_mask(qpos, kpos, kvl, window)       # unmapped page => all
+                                                     # kpos >= kvl => zeroed
+    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                           merged)
+    p = jnp.where(mask, p, 0.0)
+
+    acc_ref[...] += jax.lax.dot_general(             # bare add — no rescale
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ij == nj - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...]
+
+
+def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
+                          gamma, *, window: int = 0, softcap: float = 0.0,
+                          merged: bool = True, scale: float | None = None,
+                          bq: int = 128, interpret: bool = False):
+    """Paged fused prefill. q: (b, c, H, dk) chunk queries; kp, vp: shared
+    page pools (P, ps, hkv, dk) *after* the chunk's K/V were scattered in;
+    page_table: (b, max_pages) int32 (-1 = unmapped); index, lengths: (b,)
+    chunk start positions / real chunk lengths. Returns (b, c, H, dk).
+
+    The page axis is the grid's trailing 'arbitrary' dimension accumulating
+    into VMEM scratch — a pure ``acc += p @ v`` per page, no (m, l) state —
+    because per-page partial buffers would cost max_pages × chunk-output
+    HBM (see module docstring). The page table and the per-slot scalars
+    ride in as scalar-prefetch operands, so the gather lives in the
+    BlockSpec index map: unmapped entries clamp to page 0 and every row
+    they could contribute is masked via ``kv_len``.
+    """
+    b, c, H, dk = q.shape
+    P, ps, hkv = kp.shape[0], kp.shape[1], kp.shape[2]
+    g = H // hkv
+    npg = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(dk)
+    bq = CL.divisor_block(c, bq)
+    bqg = bq * g
+    nq = c // bq
+
+    qf = CL.fold_gqa(q, hkv)                         # (b, hkv, c*g, dk)
+    beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv, c)
+    tab = page_table.astype(jnp.int32)
+    idx1 = index.astype(jnp.int32)
+    kvl1 = (index + lengths).astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               softcap=softcap, bqg=bqg, ps=ps, g=g,
+                               merged=merged)
+
+    def page_map(ib, ih, iq, ij, tab_ref, idx_ref, kvl_ref):
+        return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,                       # table, index, kv_len
+        grid=(b, hkv, nq, npg),
+        in_specs=[
+            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
+            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
+            pl.BlockSpec((1, 1, bqg, dk),
+                         lambda ib, ih, iq, ij, *_: (ib, ih, iq, 0)),   # q
+            pl.BlockSpec((1, ps, 1, dk), page_map),                 # k page
+            pl.BlockSpec((1, ps, 1, dk), page_map),                 # v page
+        ],
+        out_specs=pl.BlockSpec((1, 1, bqg, dk),
+                               lambda ib, ih, iq, ij, *_: (ib, ih, iq, 0)),
+        scratch_shapes=[pltpu.VMEM((bqg, dk), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, c * g, dk), jnp.float32),
+        interpret=interpret,
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(tab, idx1, kvl1, beta2, gamma2, qf, kp, vp)
+
+    return CL.unfold_gqa(out, b, c, H).astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Jitted public wrappers for the fused ConSmax prefill kernels.
+
+Both wrappers consume the model's serving layouts directly — q chunk
+(b, c, H, dk), contiguous cache (b, L, hkv, dk) or page pools
+(P, ps, hkv, dk) plus a page table — so the hot path pays no layout copy
+(mirror of ../consmax_decode/ops.py). On CPU (this container) the kernel
+body executes in interpret mode; on a real TPU backend it compiles through
+Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.consmax_prefill.kernel import (consmax_prefill,
+                                                  consmax_prefill_paged)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
+                                   "bq", "bk", "interpret"))
+def consmax_prefill_op(q, k, v, index, lengths, beta, gamma, *, window=0,
+                       softcap=0.0, merged=True, scale=None, bq=128, bk=512,
+                       interpret=None):
+    """q: (b, c, H, dk) chunk at per-slot cache positions index + [0, c);
+    k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written;
+    index, lengths: (b,) int32. Returns (b, c, H, dk) in q.dtype; rows
+    >= lengths are pad rows whose output the caller discards.
+
+    ``scale=1.0`` when q is pre-scaled (the model path); None applies
+    1/sqrt(dk) (the standalone convention).
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    return consmax_prefill(q, k, v, index, lengths, beta, gamma,
+                           window=window, softcap=softcap, merged=merged,
+                           scale=scale, bq=bq, bk=bk, interpret=interp)
+
+
+@partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
+                                   "bq", "interpret"))
+def consmax_prefill_paged_op(q, kp, vp, page_table, index, lengths, beta,
+                             gamma, *, window=0, softcap=0.0, merged=True,
+                             scale=None, bq=128, interpret=None):
+    """Paged-pool variant. kp, vp: shared (P, ps, hkv, dk) pools in the
+    model's cache layout (never copied — the kernel walks page-table
+    entries via scalar prefetch); page_table: (b, max_pages) int32.
+    Returns (b, c, H, dk) in q.dtype.
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    return consmax_prefill_paged(q, kp, vp, page_table, index, lengths,
+                                 beta, gamma, window=window, softcap=softcap,
+                                 merged=merged, scale=scale, bq=bq,
+                                 interpret=interp)

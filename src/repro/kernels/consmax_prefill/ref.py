@@ -1,0 +1,38 @@
+"""jnp oracle for the fused ConSmax prefill kernels.
+
+Materializes the whole (c, L) score matrix per head — fine at test scale,
+exactly what the kernel avoids at serving scale. Shares the mask formula
+with the kernels and the serving jnp walks via ``kernels.cache_layout``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.kernels import cache_layout as CL
+
+
+def consmax_prefill_ref(q, k, v, index, lengths, beta, gamma, *,
+                        window: int = 0, softcap: float = 0.0,
+                        merged: bool = True, scale: float | None = None):
+    """q: (b, c, H, dk); k, v: (b, L, hkv, dk); index, lengths: (b,).
+    Returns (b, c, H, dk) fp32."""
+    b, c, H, dk = q.shape
+    L, hkv = k.shape[1], k.shape[2]
+    g = H // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dk)
+    qg = q.astype(jnp.float32).reshape(b, c, hkv, g, dk)
+    s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = index[:, None] + jnp.arange(c)                    # (b, c)
+    kpos = jnp.arange(L)
+    mask = CL.kv_mask(qpos[:, :, None], kpos[None, None, :],
+                      (index + lengths)[:, None, None], window)  # (b, c, L)
+    p = CL.consmax_weights(s, beta.reshape(1, hkv, g, 1, 1),
+                           gamma.reshape(1, hkv, g, 1, 1), merged)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    out = jnp.einsum("bhgqc,bchd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, c, H, dk)

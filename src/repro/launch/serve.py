@@ -43,6 +43,12 @@ def main():
     ap.add_argument("--decode-kernel", action="store_true",
                     help="split-KV consmax decode Pallas kernel "
                          "(consmax archs only; errors otherwise)")
+    ap.add_argument("--prefill-kernel", action="store_true",
+                    help="fused consmax prefill/append Pallas kernel for "
+                         "prompt chunks, contiguous and paged (consmax "
+                         "archs only; errors otherwise)")
+    ap.add_argument("--prefill-kv-block", type=int, default=512,
+                    help="KV shard size for the prefill kernel grid")
     ap.add_argument("--paged", action="store_true",
                     help="shared page-pool KV cache (continuous engine "
                          "only): slots map rows onto pool pages instead of "
@@ -73,7 +79,10 @@ def main():
     if args.engine == "static":
         sess = ServeSession(
             cfg, ServeConfig(max_seq=args.prompt_len + args.steps + 8,
-                             decode_kernel=args.decode_kernel), params)
+                             decode_kernel=args.decode_kernel,
+                             prefill_kernel=args.prefill_kernel,
+                             prefill_kv_block=args.prefill_kv_block,
+                             score_norm=cfg.score_norm), params)
         prompts = random.randint(random.key(1),
                                  (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)
@@ -92,6 +101,9 @@ def main():
                        prefill_budget=args.prefill_budget,
                        max_slots=args.max_slots,
                        decode_kernel=args.decode_kernel,
+                       prefill_kernel=args.prefill_kernel,
+                       prefill_kv_block=args.prefill_kv_block,
+                       score_norm=cfg.score_norm,
                        paged_kv=args.paged, page_size=args.page_size,
                        num_pages=args.num_pages)
     eng = ContinuousBatchingEngine(
@@ -111,7 +123,8 @@ def main():
     n = sum(len(v) for v in results.values())
     print(f"[serve/continuous] {len(results)} requests, {n} tokens in "
           f"{dt:.2f}s ({n/dt:.1f} tok/s) with {args.max_slots} slots, "
-          f"decode_kernel={args.decode_kernel}, paged={args.paged}")
+          f"decode_kernel={args.decode_kernel}, "
+          f"prefill_kernel={args.prefill_kernel}, paged={args.paged}")
     if args.paged:
         print(f"[serve/continuous] page pool: {scfg.num_pages} pages x "
               f"{scfg.page_size} rows "

@@ -46,6 +46,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              caches=None, positions=None, merged=False, remat="full",
              q_chunk=2048, kv_chunk=1024, logits_slice=None,
              logits_index=None, decode_kernel=False, decode_kv_block=256,
+             prefill_kernel=False, prefill_kv_block=512,
              prefill_append=None, decode_active=None, page_table=None):
     """Forward pass.
 
@@ -56,6 +57,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
     selects one row for the whole batch; a (b,) array gathers per-batch rows
     (ragged prompts prefilled together).
     decode_kernel: one-token consmax decode via the split-KV Pallas kernel.
+    prefill_kernel: chunked consmax append prefill via the fused Pallas
+    kernel (kernels/consmax_prefill) instead of the jnp KV walk.
     prefill_append: (b,) int32 real chunk lengths — chunked append-at-index
     prefill: tokens is a fixed-size chunk written into each attention cache
     at its per-slot ``index`` (which then advances by the real length).
@@ -87,6 +90,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
                 bp[f"b{i}"], x, cfg, kind, positions=positions, cache=ci,
                 cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk,
                 decode_kernel=decode_kernel, decode_kv_block=decode_kv_block,
+                prefill_kernel=prefill_kernel,
+                prefill_kv_block=prefill_kv_block,
                 prefill_append=prefill_append, decode_active=decode_active,
                 page_table=page_table)
             aux = aux + a

@@ -26,7 +26,11 @@ contribute independent ``exp(s-beta)/gamma @ v`` partials, so there is no
 online-softmax rescale state to thread between admission chunks. With
 ``ServeConfig.decode_kernel=True`` the one-token decode path runs the
 split-KV Pallas kernel (kernels/consmax_decode) instead of the jnp row
-attention (consmax archs only — anything else raises at construction).
+attention, and with ``ServeConfig.prefill_kernel=True`` every append-prefill
+chunk (contiguous or paged) runs the fused kernel (kernels/consmax_prefill)
+instead of the jnp KV walk — both consume the cache in its stored layout,
+so no serving step ever transposes the cache (consmax archs only — anything
+else raises at construction).
 """
 from __future__ import annotations
 
@@ -41,12 +45,16 @@ from repro.serve.scheduler import PagePool, Scheduler
 
 def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
     """Returns (init_caches, prefill_step, decode_step, prefill_ragged)."""
-    if scfg.decode_kernel and cfg.score_norm != "consmax":
-        raise ValueError(
-            "ServeConfig.decode_kernel=True requires score_norm='consmax' "
-            f"(got {cfg.score_norm!r} for {cfg.arch_id}): the split-KV "
-            "decode kernel has no softmax/softermax path. Drop "
-            "--decode-kernel or serve a consmax arch.")
+    for flag, name, drop in ((scfg.decode_kernel, "decode_kernel",
+                              "--decode-kernel"),
+                             (scfg.prefill_kernel, "prefill_kernel",
+                              "--prefill-kernel")):
+        if flag and cfg.score_norm != "consmax":
+            raise ValueError(
+                f"ServeConfig.{name}=True requires score_norm='consmax' "
+                f"(got {cfg.score_norm!r} for {cfg.arch_id}): the fused "
+                f"serving kernels have no softmax/softermax path. Drop "
+                f"{drop} or serve a consmax arch.")
     kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
 
     def init_caches(batch: int):
@@ -70,6 +78,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
         logits, caches, _ = T.lm_apply(
             params, cfg, caches=caches, merged=True,
             prefill_append=lengths, logits_index=lengths - 1,
+            prefill_kernel=scfg.prefill_kernel,
+            prefill_kv_block=scfg.prefill_kv_block,
             q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
         return logits[:, 0], caches
 
@@ -259,6 +269,8 @@ class ContinuousBatchingEngine:
             logits, slot_caches, _ = T.lm_apply(
                 params, cfg, tokens=tokens, caches=slot_caches, merged=True,
                 prefill_append=lengths, logits_index=lengths[0] - 1,
+                prefill_kernel=scfg.prefill_kernel,
+                prefill_kv_block=scfg.prefill_kv_block,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk)
             caches = jax.tree.map(
                 lambda big, one: jax.lax.dynamic_update_slice_in_dim(
@@ -280,6 +292,8 @@ class ContinuousBatchingEngine:
             logits, slot_caches, _ = T.lm_apply(
                 params, cfg, tokens=tokens, caches=slot_caches, merged=True,
                 prefill_append=lengths, logits_index=lengths[0] - 1,
+                prefill_kernel=scfg.prefill_kernel,
+                prefill_kv_block=scfg.prefill_kv_block,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
                 page_table=page_row)
             def put(path, big, one):

@@ -36,6 +36,7 @@ SHAPES = [
     (3, 96, 8, 2, 32, 32),      # GQA 4:1 + non-block-multiple L
     (2, 200, 4, 1, 64, 64),     # MQA + non-block-multiple L
     (1, 64, 2, 2, 128, 256),    # bk > L clamp
+    (2, 101, 4, 2, 32, 32),     # prime L: degenerate-divisor pad path
 ]
 
 
