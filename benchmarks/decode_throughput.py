@@ -7,9 +7,12 @@ Four measurements:
 * **engine** — a queue of heterogeneous requests (random prompt lengths and
   token budgets) served by (a) the static ``ServeSession`` (everyone padded
   to the longest prompt, decoded for the largest budget — the seed behaviour)
-  and (b) the slot-recycling ``ContinuousBatchingEngine``. Useful-token
-  throughput counts only requested tokens, so static-batch padding waste
-  shows up directly.
+  and (b) the slot-recycling ``ContinuousBatchingEngine``, with fused
+  in-step sampling (the default) AND the legacy host-sampling baseline
+  (``fused_sampling=False``: a (max_slots, vocab) logits transfer plus a
+  host sampling pass per token) — the fused-vs-host gap is the op-fusion
+  claim, measured. Useful-token throughput counts only requested tokens,
+  so static-batch padding waste shows up directly.
 * **prefill** — prompt tokens/s of a prefill-only queue (one-token budgets:
   the first token samples from the final chunk's logits, so no decode step
   ever runs), jnp KV walk vs the fused ``consmax_prefill`` kernel, on
@@ -23,10 +26,12 @@ Four measurements:
   ``max_slots x max_seq`` — the HBM claim of the paged design, measured.
 
 Besides the CSV rows on stdout, the run writes ``BENCH_serve.json``
-(``--json-out``) — decode tok/s, prefill tok/s, decode-step latencies, the
-``long_500k`` step, and page occupancy in one machine-readable dict — so
-the serving perf trajectory is recorded per commit (CI uploads it as an
-artifact).
+(``--json-out``) — decode tok/s (fused and host-sampling), prefill tok/s,
+decode-step latencies, the ``long_500k`` step, and page occupancy in one
+machine-readable dict — so the serving perf trajectory is recorded per
+commit (CI uploads it as an artifact). A schema assertion runs before the
+write: a refactor that drops an expected key fails the benchmark instead
+of silently thinning the artifact.
 
     PYTHONPATH=src python benchmarks/decode_throughput.py            # quick
     PYTHONPATH=src python benchmarks/decode_throughput.py --paged    # page pool
@@ -49,6 +54,7 @@ from repro.configs.base import SHAPES, ServeConfig
 from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.nn.module import Ctx
+from repro.serve import sampling as S
 from repro.serve.engine import (ContinuousBatchingEngine, ServeSession,
                                 make_serve_fns)
 
@@ -88,10 +94,13 @@ def _static_toks_per_s(cfg, params, reqs, max_seq):
 
 
 def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
-                           paged=False):
+                           paged=False, fused=True):
+    """``fused=False`` serves with the legacy host-sampling steps (logits
+    shipped to the host per token) — the A/B baseline for the fused
+    in-step epilogue."""
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
                        decode_kernel=decode_kernel, paged_kv=paged,
-                       page_size=8 if paged else 256)
+                       page_size=8 if paged else 256, fused_sampling=fused)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
 
     def serve():
@@ -129,21 +138,21 @@ def _prefill_step_tok_s(cfg, params, prefill_kernel, paged=False, chunk=8,
     lens = jnp.asarray([chunk], jnp.int32)
     fill = (max_seq // 2) // chunk * chunk                 # chunk-aligned
     pin = jax.jit(lambda c: _pin_index(c, fill, slot=slot_i))
-    tail = ()
+    page_row = None
     if paged:
         eng.pool.reserve(slot_i, fill + 2 * chunk)
         eng.pool.ensure(slot_i, fill + chunk)
-        tail = (eng._device_table()[slot_i:slot_i + 1],)
+        page_row = eng._device_table()[slot_i:slot_i + 1]
     caches = pin(eng.caches)
-    logits, caches = eng._prefill(params, caches, slot, toks, lens,
-                                  *tail)                   # compile
+    out, caches = eng._prefill(params, caches, slot, toks, lens,
+                               eng.bank, page_row)         # compile
     ts = []
     for _ in range(iters):
         caches = pin(caches)                               # back to mid-fill
         t0 = time.perf_counter()
-        logits, caches = eng._prefill(params, caches, slot, toks, lens,
-                                      *tail)
-        jax.block_until_ready(logits)
+        out, caches = eng._prefill(params, caches, slot, toks, lens,
+                                   eng.bank, page_row)
+        jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
     best = float(np.min(ts))
     return chunk / best, best * 1e6
@@ -159,13 +168,24 @@ def _pin_index(caches, value, slot=None):
     return tree_map_with_path(pin, caches)
 
 
-def _step_us(cfg, params, batch, cache_len, decode_kernel):
-    scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel)
+def _step_us(cfg, params, batch, cache_len, decode_kernel, fused=False):
+    """One jitted decode step at a pinned cache length. ``fused=True``
+    measures the production token-emitting step (sampling epilogue inside,
+    (batch,) int32 out); ``fused=False`` the legacy logits-returning step —
+    the pair isolates the epilogue's device cost from the engine-level
+    host-transfer savings."""
+    scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel,
+                       fused_sampling=fused)
     init_caches, _, decode_step, _ = make_serve_fns(cfg, scfg)
     caches = _pin_index(init_caches(batch), cache_len - 1)
-    toks = jnp.zeros((batch, 1), jnp.int32)
+    if fused:
+        args = (params, caches, {"tokens": jnp.zeros((batch,), jnp.int32)},
+                S.bank_init(batch))
+    else:
+        args = (params, caches,
+                {"tokens": jnp.zeros((batch, 1), jnp.int32)})
     fn = jax.jit(decode_step)
-    return bench_wall(fn, params, caches, {"tokens": toks}, iters=3, warmup=1)
+    return bench_wall(fn, *args, iters=3, warmup=1)
 
 
 def _paged_long_step(cfg, params, rows, report):
@@ -176,8 +196,10 @@ def _paged_long_step(cfg, params, rows, report):
     L, _, _ = SHAPES["long_500k"]
     max_slots, page_size = 4, 1024
     num_pages = -(-L // page_size) + 8                     # thin headroom
+    # legacy logits step: this cell measures the (batch, vocab) surface
     scfg = ServeConfig(max_seq=L, max_slots=max_slots, paged_kv=True,
-                       page_size=page_size, num_pages=num_pages)
+                       page_size=page_size, num_pages=num_pages,
+                       fused_sampling=False)
     total_cells = num_pages * page_size
     contiguous_cells = max_slots * L
     assert total_cells < contiguous_cells, (total_cells, contiguous_cells)
@@ -206,6 +228,38 @@ def _paged_long_step(cfg, params, rows, report):
                                  "contiguous": contiguous_cells}
 
 
+def _assert_schema(report, batches, cache_lens, step_batches, paged):
+    """The CI artifact contract: a refactor that silently drops a key (or
+    writes a non-numeric value) fails the benchmark run instead of
+    producing a quietly thinner BENCH_serve.json."""
+    for key, typ in (("arch", str), ("mode", str), ("paged", bool),
+                     ("decode_tok_s", dict), ("prefill_tok_s", dict),
+                     ("decode_step_us", dict), ("page_occupancy", dict)):
+        assert isinstance(report.get(key), typ), (
+            f"BENCH_serve.json schema: missing/mistyped {key!r}")
+    num = (int, float)
+    for n in batches:
+        for k in (f"static_b{n}", f"continuous_b{n}",
+                  f"continuous_kernel_b{n}", f"continuous_hostsample_b{n}"):
+            assert isinstance(report["decode_tok_s"].get(k), num), (
+                f"BENCH_serve.json schema: decode_tok_s[{k!r}] missing — "
+                "fused-vs-host sampling rows are part of the artifact")
+    labels = ("contiguous",) + (("paged",) if paged else ())
+    for label in labels:
+        for k in (f"{label}_jnp", f"{label}_kernel"):
+            assert isinstance(report["prefill_tok_s"].get(k), num), (
+                f"BENCH_serve.json schema: prefill_tok_s[{k!r}] missing")
+    for L in cache_lens:
+        for b in step_batches:
+            for k in (f"L{L}_b{b}_row", f"L{L}_b{b}_splitkv",
+                      f"L{L}_b{b}_fused"):
+                assert isinstance(report["decode_step_us"].get(k), num), (
+                    f"BENCH_serve.json schema: decode_step_us[{k!r}] missing")
+    if paged:
+        assert isinstance(report.get("long_500k_step_us"), num), (
+            "BENCH_serve.json schema: long_500k_step_us missing in --paged")
+
+
 def run(arch="qwen2-1.5b", *, full=False, paged=False,
         json_out="BENCH_serve.json"):
     cfg = get_config(arch, smoke=True)
@@ -227,16 +281,25 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
                                        False)
         ck, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
                                        True)
+        # host-sampling baseline: same engine, logits shipped per token and
+        # sampled host-side (the pre-fused-epilogue serving path)
+        ho, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                       False, fused=False)
         rows.append((f"serve/static_b{n}_tok_s", f"{st:.1f}", "useful_tokens"))
         rows.append((f"serve/continuous_b{n}_tok_s", f"{co:.1f}",
-                     f"slots={slots}"))
+                     f"slots={slots};fused_sampling"))
         rows.append((f"serve/continuous_kernel_b{n}_tok_s", f"{ck:.1f}",
                      f"slots={slots};split_kv"))
+        rows.append((f"serve/continuous_hostsample_b{n}_tok_s", f"{ho:.1f}",
+                     f"slots={slots};per_token_logits_transfer"))
         rows.append((f"serve/continuous_b{n}_speedup", f"{co/st:.3f}x",
                      "vs_static_useful"))
+        rows.append((f"serve/fused_sampling_b{n}_speedup", f"{co/ho:.3f}x",
+                     "vs_host_sampling"))
         report["decode_tok_s"][f"static_b{n}"] = st
         report["decode_tok_s"][f"continuous_b{n}"] = co
         report["decode_tok_s"][f"continuous_kernel_b{n}"] = ck
+        report["decode_tok_s"][f"continuous_hostsample_b{n}"] = ho
         if paged:
             pg, occ = _continuous_toks_per_s(cfg, params, reqs, max_seq,
                                              slots, False, paged=True)
@@ -270,16 +333,21 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
         for b in step_batches:
             us_row = _step_us(cfg, params, b, L, False)
             us_ker = _step_us(cfg, params, b, L, True)
+            us_fus = _step_us(cfg, params, b, L, False, fused=True)
             rows.append((f"serve/step_L{L}_b{b}_row_us", f"{us_row:.0f}",
                          f"{1e6*b/us_row:.1f}tok_s"))
             rows.append((f"serve/step_L{L}_b{b}_splitkv_us", f"{us_ker:.0f}",
                          f"{1e6*b/us_ker:.1f}tok_s;interpret_on_cpu"))
+            rows.append((f"serve/step_L{L}_b{b}_fused_us", f"{us_fus:.0f}",
+                         f"{1e6*b/us_fus:.1f}tok_s;in_step_sampling"))
             report["decode_step_us"][f"L{L}_b{b}_row"] = us_row
             report["decode_step_us"][f"L{L}_b{b}_splitkv"] = us_ker
+            report["decode_step_us"][f"L{L}_b{b}_fused"] = us_fus
 
     # ---- paged: the long_500k shape on a sub-contiguous page pool ----
     if paged:
         _paged_long_step(cfg, params, rows, report)
+    _assert_schema(report, batches, cache_lens, step_batches, paged)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)

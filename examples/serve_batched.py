@@ -1,6 +1,6 @@
 """Batched serving example (deliverable b, serving flavour): prefill a batch
-of prompts, stream decode steps with the merged ConSmax constant, report
-per-token latency and tokens/sec.
+of prompts, stream decode steps with the merged ConSmax constant — sampling
+fused into the jitted steps — and report per-token latency and tokens/sec.
 
     PYTHONPATH=src python examples/serve_batched.py --batch 8 --steps 32
 """
@@ -14,6 +14,7 @@ from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.nn.module import Ctx
 from repro.serve.engine import ServeSession
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -22,6 +23,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=2)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)  # reduced config on CPU
@@ -32,8 +34,9 @@ def main():
                              0, cfg.vocab_size)
 
     t0 = time.perf_counter()
-    out = sess.generate(prompts, steps=args.steps, temperature=0.8,
-                        key=random.key(2))
+    out = sess.generate(prompts, steps=args.steps,
+                        sampling=SamplingParams(temperature=0.8, top_k=50,
+                                                seed=args.seed))
     dt = time.perf_counter() - t0
     toks = args.batch * args.steps
     print(f"arch={args.arch} (smoke) batch={args.batch} "

@@ -152,6 +152,14 @@ class ServeConfig:
     kv_chunk: int = 1024
     # --- continuous batching (serve/scheduler.py + engine.py) ---
     max_slots: int = 8               # concurrent requests in the decode batch
+    fused_sampling: bool = True      # sample logits->token INSIDE the jitted
+                                     # prefill/decode steps (per-slot
+                                     # serve/sampling.SamplingParams banks;
+                                     # steps return (b,) int32 tokens, no
+                                     # per-token (b, vocab) host transfer).
+                                     # False = legacy logits-returning steps
+                                     # with host-side sampling (dryrun cells
+                                     # and the benchmark A/B baseline)
     prefill_budget: int = 0          # max prefill tokens per engine iteration
                                      # (0 = one prefill_chunk per iteration)
     decode_kernel: bool = False      # split-KV consmax_decode Pallas kernel

@@ -5,6 +5,8 @@ dry-run validates).
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --steps 16
     PYTHONPATH=src python -m repro.launch.serve --engine continuous \
         --requests 12 --max-slots 4 --decode-kernel
+    PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --temperature 0.8 --top-k 50 --top-p 0.95 --seed 7
 
 ``--engine static`` runs the lockstep ServeSession; ``--engine continuous``
 runs the slot-recycling ContinuousBatchingEngine over a queue of requests
@@ -12,6 +14,13 @@ with heterogeneous prompt/generation lengths — prompts enter the KV cache
 in fixed ``--prefill-chunk`` appends at the slot index (one compiled prefill
 shape for the whole run), with at most ``--prefill-budget`` prefill tokens
 per engine iteration so long prompts cannot stall decode.
+
+Sampling (``--temperature``/``--top-k``/``--top-p``/``--min-p``/``--seed``)
+runs fused inside the jitted steps: per-slot SamplingParams banks, tokens
+sampled device-side, no per-token logits transfer (``--host-sampling``
+switches to the legacy host path — same streams, measurably more host
+traffic). In continuous mode request i draws from seed ``--seed + i``, so
+every request's stream is reproducible regardless of scheduling.
 
 ``--decode-kernel`` requires a consmax arch; requesting it on a softmax/
 softermax config raises at construction instead of silently serving the
@@ -31,7 +40,21 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    # sampling knobs -> per-request SamplingParams
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples with the masks below")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep the k highest-score tokens (0 = disabled)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass cutoff in (0, 1] (1 = disabled)")
+    ap.add_argument("--min-p", type=float, default=0.0,
+                    help="min prob relative to the max, [0, 1) "
+                         "(0 = disabled)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed; continuous requests use seed + i")
+    ap.add_argument("--host-sampling", action="store_true",
+                    help="legacy host-side sampling (logits shipped per "
+                         "token) instead of the fused in-step epilogue")
     # continuous-engine knobs
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-slots", type=int, default=4)
@@ -62,6 +85,8 @@ def main():
                          "set lower to oversubscribe slots onto fewer cells")
     args = ap.parse_args()
 
+    import dataclasses
+
     from jax import random
 
     from repro.configs.base import ServeConfig
@@ -69,12 +94,16 @@ def main():
     from repro.models import transformer as T
     from repro.nn.module import Ctx
     from repro.serve.engine import ContinuousBatchingEngine, ServeSession
+    from repro.serve.sampling import SamplingParams
 
     cfg = get_config(args.arch, smoke=True)
     if cfg.frontend != "tokens":
         raise SystemExit(f"{args.arch}: embedding-frontend serving demo is "
                          "exercised by the dry-run decode cells")
     params = T.lm_init(Ctx(random.key(0)), cfg)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, min_p=args.min_p, seed=args.seed)
+    fused = not args.host_sampling
 
     if args.engine == "static":
         sess = ServeSession(
@@ -82,17 +111,19 @@ def main():
                              decode_kernel=args.decode_kernel,
                              prefill_kernel=args.prefill_kernel,
                              prefill_kv_block=args.prefill_kv_block,
+                             fused_sampling=fused,
                              score_norm=cfg.score_norm), params)
         prompts = random.randint(random.key(1),
                                  (args.batch, args.prompt_len),
                                  0, cfg.vocab_size)
         t0 = time.perf_counter()
-        out = sess.generate(prompts, steps=args.steps,
-                            temperature=args.temperature,
-                            key=random.key(2) if args.temperature > 0 else None)
+        out = sess.generate(prompts, steps=args.steps, sampling=sp)
         dt = time.perf_counter() - t0
         n = args.batch * args.steps
-        print(f"[serve] {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s)")
+        # report the session's ACTUAL mode: recurrent/embeds archs downgrade
+        # to host-side sampling even when --host-sampling wasn't passed
+        print(f"[serve] {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s), "
+              f"sampling={sp}, fused={sess._fused}")
         print("[serve] sample:", out[0].tolist())
         return
 
@@ -103,12 +134,11 @@ def main():
                        decode_kernel=args.decode_kernel,
                        prefill_kernel=args.prefill_kernel,
                        prefill_kv_block=args.prefill_kv_block,
+                       fused_sampling=fused,
                        score_norm=cfg.score_norm,
                        paged_kv=args.paged, page_size=args.page_size,
                        num_pages=args.num_pages)
-    eng = ContinuousBatchingEngine(
-        cfg, scfg, params, temperature=args.temperature,
-        key=random.key(2) if args.temperature > 0 else None)
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
     rng = random.key(1)
     uids = []
     for i in range(args.requests):
@@ -116,7 +146,9 @@ def main():
         plen = 1 + int(random.randint(k1, (), 0, args.prompt_len))
         steps = 1 + int(random.randint(k2, (), 0, args.steps))
         prompt = random.randint(rng, (plen,), 0, cfg.vocab_size).tolist()
-        uids.append(eng.submit(prompt, steps))
+        # per-request stream: seed + i, reproducible under any scheduling
+        uids.append(eng.submit(prompt, steps, sampling=dataclasses.replace(
+            sp, seed=args.seed + i)))
     t0 = time.perf_counter()
     results = eng.run()
     dt = time.perf_counter() - t0
@@ -124,7 +156,12 @@ def main():
     print(f"[serve/continuous] {len(results)} requests, {n} tokens in "
           f"{dt:.2f}s ({n/dt:.1f} tok/s) with {args.max_slots} slots, "
           f"decode_kernel={args.decode_kernel}, "
-          f"prefill_kernel={args.prefill_kernel}, paged={args.paged}")
+          f"prefill_kernel={args.prefill_kernel}, paged={args.paged}, "
+          f"fused_sampling={fused}")
+    if args.temperature > 0:
+        print(f"[serve/continuous] sampling: temperature={args.temperature} "
+              f"top_k={args.top_k} top_p={args.top_p} min_p={args.min_p} "
+              f"seeds={args.seed}..{args.seed + args.requests - 1}")
     if args.paged:
         print(f"[serve/continuous] page pool: {scfg.num_pages} pages x "
               f"{scfg.page_size} rows "

@@ -47,7 +47,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              q_chunk=2048, kv_chunk=1024, logits_slice=None,
              logits_index=None, decode_kernel=False, decode_kv_block=256,
              prefill_kernel=False, prefill_kv_block=512,
-             prefill_append=None, decode_active=None, page_table=None):
+             prefill_append=None, decode_active=None, page_table=None,
+             logits_epilogue=None):
     """Forward pass.
 
     tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
@@ -67,7 +68,13 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
     page_table: (b, max_pages) int32 — paged KV serving: attention caches
     are shared page pools (see init_paged_caches) and each slot's logical
     rows live on the pages its table row maps.
-    Returns (logits, new_caches, aux_loss).
+    logits_epilogue: callable ``(logits, new_caches) -> out`` fused into
+    the same computation in place of the logits return — the serving hook
+    (serve/sampling.sample_tokens) that turns the jitted prefill/decode
+    steps into token emitters, so no (b, vocab) array ever crosses to the
+    host. ``new_caches`` is passed so the epilogue can read the post-step
+    per-slot cache index (its per-slot sample positions).
+    Returns (logits | epilogue out, new_caches, aux_loss).
     """
     b, s = (tokens.shape if tokens is not None else embeds.shape[:2])
     if positions is None and caches is None:
@@ -133,6 +140,8 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
         logits = (cfg.final_softcap
                   * jnp.tanh(logits.astype(jnp.float32) / cfg.final_softcap))
     logits = shard(logits, "act_batch,act_seq,act_vocab")
+    if logits_epilogue is not None:
+        return logits_epilogue(logits, new_caches), new_caches, aux
     return logits, new_caches, aux
 
 

@@ -19,6 +19,20 @@ Two drivers share the same jitted model steps:
   ``active`` mask keeps PREFILLING/free slots' rows untouched), and EOS /
   token-budget completion recycles the slot for the next queued request.
 
+**Sampling is part of the jitted steps** (``ServeConfig.fused_sampling``,
+the default): every request carries its own ``serve/sampling.SamplingParams``
+(temperature, top-k/top-p/min-p, seed), mirrored into SoA ``(max_slots,)``
+device banks that live next to the caches, and the steps end in the fused
+``sample_tokens`` epilogue — so prefill and decode return ``(b,)`` int32
+tokens, the decode loop feeds the last-token vector back device-side, and
+the host only drains that small token array for EOS checks and recording.
+No per-token ``(max_slots, vocab)`` logits transfer remains. Per-slot draw
+keys are ``fold_in(seed_key, cache position)``, making a request's stream
+reproducible regardless of co-resident traffic or slot placement. With
+``fused_sampling=False`` the steps return logits as before and sampling
+runs host-side through the SAME ``serve/sampling`` code — the dryrun cells
+and the benchmark's fused-vs-host A/B baseline.
+
 ConSmax serving uses the merged inference constant C = e^{-beta}/gamma
 (paper Eq. 3) — ``merged=True`` throughout. ConSmax's sync-free
 normalization is what makes the chunked prefill this simple: chunks
@@ -34,17 +48,48 @@ else raises at construction).
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
 from repro.models import transformer as T
+from repro.serve import sampling as S
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import PagePool, Scheduler
 
 
+def _has_attention(cfg: ModelConfig) -> bool:
+    return any(k in ("attn", "attn_moe", "global", "local")
+               for k in cfg.block_pattern)
+
+
+def _attention_only(cfg: ModelConfig) -> bool:
+    return all(k in ("attn", "attn_moe", "global", "local")
+               for k in cfg.block_pattern)
+
+
 def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
-    """Returns (init_caches, prefill_step, decode_step, prefill_ragged)."""
+    """Returns (init_caches, prefill_step, decode_step, prefill_ragged).
+
+    With ``scfg.fused_sampling`` (the default) every step takes a trailing
+    ``sampling`` argument — the SoA parameter bank from
+    ``serve/sampling.bank_of``/``bank_init`` — and returns
+    ``(tokens (b,) int32, caches)``: the logits→token epilogue runs inside
+    the jitted step (per-slot keys from the post-step cache index), so no
+    ``(b, vocab)`` array is ever produced as a step output. The fused
+    decode step takes ``batch_inputs["tokens"]`` as the ``(b,)`` last-token
+    vector (it reshapes internally) plus optional ``active`` (b,) bool —
+    rows where False return their input token unchanged — and optional
+    ``page_table``.
+
+    With ``fused_sampling=False`` the legacy logits-returning signatures
+    are preserved exactly (decode tokens ``(b, 1)``; returns
+    ``(logits (b, vocab), caches)``) for the dryrun cells and host-sampling
+    baselines.
+    """
     for flag, name, drop in ((scfg.decode_kernel, "decode_kernel",
                               "--decode-kernel"),
                              (scfg.prefill_kernel, "prefill_kernel",
@@ -55,49 +100,85 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
                 f"(got {cfg.score_norm!r} for {cfg.arch_id}): the fused "
                 f"serving kernels have no softmax/softermax path. Drop "
                 f"{drop} or serve a consmax arch.")
+    fused = scfg.fused_sampling
+    if fused and cfg.frontend != "tokens":
+        raise ValueError(
+            f"ServeConfig.fused_sampling=True requires the token frontend "
+            f"(got {cfg.frontend!r} for {cfg.arch_id}): the fused steps "
+            "emit token ids. Pass fused_sampling=False for the logits-"
+            "returning steps.")
+    if fused and not _has_attention(cfg):
+        raise ValueError(
+            f"ServeConfig.fused_sampling=True requires at least one "
+            f"attention block (got {cfg.block_pattern} for {cfg.arch_id}): "
+            "the per-slot sample positions are derived from the attention "
+            "cache index. Pass fused_sampling=False to sample host-side.")
     kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
 
     def init_caches(batch: int):
         return T.init_caches(cfg, batch, scfg.max_seq, kv_dtype=kv_dtype)
 
-    def prefill_step(params, caches, batch_inputs):
-        """Whole-prompt prefill; returns (last-position logits, caches)."""
+    def _epilogue(sampling):
+        """Fused logits→token tail: sample the last kept row with per-slot
+        keys folded on the POST-step cache index (= prompt + generated so
+        far, a pure function of the request's own stream)."""
+        def epi(logits, new_caches):
+            return S.sample_tokens(logits[:, -1], sampling,
+                                   T.cache_index(new_caches))
+        return epi
+
+    def prefill_step(params, caches, batch_inputs, sampling=None):
+        """Whole-prompt prefill; returns (first sampled tokens | last-
+        position logits, caches)."""
         kw = _model_inputs(cfg, batch_inputs)
         s = (kw.get("tokens") if "tokens" in kw else kw["embeds"]).shape[1]
-        logits, caches, _ = T.lm_apply(
+        out, caches, _ = T.lm_apply(
             params, cfg, caches=caches, merged=True,
             positions=jnp.arange(s)[None, :], logits_slice=slice(-1, None),
+            logits_epilogue=_epilogue(sampling) if fused else None,
             q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
-        return logits[:, -1], caches
+        return (out if fused else out[:, -1]), caches
 
-    def prefill_ragged(params, caches, batch_inputs, lengths):
+    def prefill_ragged(params, caches, batch_inputs, lengths, sampling=None):
         """Right-padded ragged batch prefill via the append-at-index path:
         pad K/V never enters the cache, each slot's index lands on its real
         length, and logits are gathered per-request at ``lengths - 1``."""
         kw = _model_inputs(cfg, batch_inputs)
-        logits, caches, _ = T.lm_apply(
+        out, caches, _ = T.lm_apply(
             params, cfg, caches=caches, merged=True,
             prefill_append=lengths, logits_index=lengths - 1,
             prefill_kernel=scfg.prefill_kernel,
             prefill_kv_block=scfg.prefill_kv_block,
+            logits_epilogue=_epilogue(sampling) if fused else None,
             q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
-        return logits[:, 0], caches
+        return (out if fused else out[:, 0]), caches
 
-    def decode_step(params, caches, batch_inputs):
-        """One-token decode. batch_inputs: tokens (b,1) | embeds (b,1,d),
-        plus optional ``active`` (b,) bool — slots where False keep cache
-        row and index untouched (their logits are garbage to discard) —
-        and optional ``page_table`` (b, max_pages) int32 for paged caches."""
+    def decode_step(params, caches, batch_inputs, sampling=None):
+        """One-token decode. Fused: batch_inputs["tokens"] is the (b,)
+        last-token vector; returns the next (b,) tokens, with rows where
+        ``active`` is False passed through unchanged (their cache rows and
+        index also stay untouched). Legacy: tokens (b,1) | embeds (b,1,d),
+        returns (b, vocab) logits. Optional ``page_table`` (b, max_pages)
+        int32 for paged caches either way."""
+        toks = batch_inputs.get("tokens")
+        if fused:
+            batch_inputs = dict(batch_inputs, tokens=toks[:, None])
         kw = _model_inputs(cfg, batch_inputs)
         index = T.cache_index(caches)
         positions = index[:, None] if index is not None else None
-        logits, caches, _ = T.lm_apply(
+        out, caches, _ = T.lm_apply(
             params, cfg, caches=caches, merged=True, positions=positions,
             decode_kernel=scfg.decode_kernel,
             decode_kv_block=scfg.decode_kv_block,
             decode_active=batch_inputs.get("active"),
-            page_table=batch_inputs.get("page_table"), **kw)
-        return logits[:, -1], caches
+            page_table=batch_inputs.get("page_table"),
+            logits_epilogue=_epilogue(sampling) if fused else None, **kw)
+        if not fused:
+            return out[:, -1], caches
+        active = batch_inputs.get("active")
+        if active is not None:
+            out = jnp.where(active, out, toks)
+        return out, caches
 
     return init_caches, prefill_step, decode_step, prefill_ragged
 
@@ -114,88 +195,132 @@ def _model_inputs(cfg: ModelConfig, batch_inputs: dict) -> dict:
 
 
 class ServeSession:
-    """Batched autoregressive generation driver (greedy / temperature)."""
+    """Batched autoregressive generation driver.
 
-    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
-                 positions_fallback: bool = False):
+    Sampling (greedy / temperature / top-k / top-p / min-p, per row) runs
+    fused inside the jitted steps when the arch has attention caches and a
+    token frontend; recurrent-only or embedding-frontend archs fall back to
+    the host-side path through the same ``serve/sampling`` code (documented
+    downgrade — the sampled streams are identical)."""
+
+    def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params):
         if scfg.paged_kv:
             raise NotImplementedError(
                 "ServeSession is the static contiguous baseline; paged KV "
                 "serving lives in ContinuousBatchingEngine")
         self.cfg, self.scfg = cfg, scfg
         self.params = params
-        ic, pf, dc, pr = make_serve_fns(cfg, scfg)
+        self._fused = (scfg.fused_sampling and cfg.frontend == "tokens"
+                       and _has_attention(cfg))
+        fns_scfg = scfg if self._fused == scfg.fused_sampling else (
+            dataclasses.replace(scfg, fused_sampling=False))
+        ic, pf, dc, pr = make_serve_fns(cfg, fns_scfg)
         self._init_caches = ic
         self._prefill = jax.jit(pf)
         self._prefill_ragged = jax.jit(pr)
         self._decode = jax.jit(dc)
-        self._pos = None  # fallback position counter for SSM-only archs
-        self._positions_fallback = positions_fallback
 
     def generate(self, prompts: jnp.ndarray, *, steps: int,
-                 temperature: float = 0.0, key=None, cond=None,
-                 lengths=None):
+                 sampling=None, temperature: float = 0.0, seed: int = 0,
+                 cond=None, lengths=None):
         """prompts: (b, s) int tokens (token frontend). Returns (b, steps).
 
+        sampling: a ``SamplingParams`` (broadcast over rows) or a per-row
+        sequence of them; ``None`` builds one from the legacy
+        ``temperature``/``seed`` scalars (0 = greedy).
         lengths: optional (b,) real prompt lengths for a right-padded ragged
         batch — prefill masks pad rows and each row decodes from its own
         position, so row r's output equals serving prompt r alone."""
         b, s = prompts.shape
+        if sampling is None:
+            sampling = SamplingParams(temperature=float(temperature),
+                                      seed=seed)
+        bank = S.bank_of(sampling, b)
         caches = self._init_caches(b)
         inputs = {"tokens": prompts}
         if cond is not None:
             inputs["cond"] = cond
         if self.cfg.frontend != "tokens":
             raise NotImplementedError("embedding-frontend generation")
-        if lengths is None:
-            logits, caches = self._prefill(self.params, caches, inputs)
-        else:
+        if lengths is not None:
             if not _attention_only(self.cfg):
                 # prefill_append masks pad rows in attention KV caches only;
                 # recurrent (mamba/xlstm) state would scan the pad tokens
                 raise NotImplementedError(
                     "ragged generate(lengths=...) requires a pure-attention "
                     f"block pattern (got {self.cfg.block_pattern})")
-            logits, caches = self._prefill_ragged(
-                self.params, caches, inputs,
-                jnp.asarray(lengths, jnp.int32))
+            lengths = jnp.asarray(lengths, jnp.int32)
+        if self._fused:
+            return self._generate_fused(caches, inputs, bank, steps, cond,
+                                        lengths)
+        return self._generate_host(caches, inputs, bank, steps, s, cond,
+                                   lengths)
+
+    def _generate_fused(self, caches, inputs, bank, steps, cond, lengths):
+        """Device-side sampling: the steps emit (b,) tokens; the loop feeds
+        them straight back — only the final (b, steps) stack reaches the
+        host."""
+        if lengths is None:
+            tok, caches = self._prefill(self.params, caches, inputs, bank)
+        else:
+            tok, caches = self._prefill_ragged(self.params, caches, inputs,
+                                               lengths, bank)
+        outs = [tok]
+        for _ in range(steps - 1):
+            step_in = {"tokens": tok}
+            if cond is not None:
+                step_in["cond"] = cond
+            tok, caches = self._decode(self.params, caches, step_in, bank)
+            outs.append(tok)
+        return jnp.stack(outs, axis=1)
+
+    def _generate_host(self, caches, inputs, bank, steps, s, cond, lengths):
+        """Legacy logits path + host-side sampling through the SAME
+        serve/sampling schedule: position t of row r folds
+        (seed_r, prompt_len_r + t), so the streams match the fused path."""
+        b = bank["seed"].shape[0]
+        if lengths is None:
+            logits, caches = self._prefill(self.params, caches, inputs)
+            pos = jnp.full((b,), s, jnp.int32)
+        else:
+            logits, caches = self._prefill_ragged(self.params, caches,
+                                                  inputs, lengths)
+            pos = lengths
         outs = []
-        tok = self._sample(logits, temperature, key, 0)
-        for i in range(steps):
+        tok = S.sample_tokens(logits, bank, pos)
+        for _ in range(steps - 1):
             outs.append(tok)
             step_in = {"tokens": tok[:, None]}
             if cond is not None:
                 step_in["cond"] = cond
             logits, caches = self._decode(self.params, caches, step_in)
-            tok = self._sample(logits, temperature, key, i + 1)
+            pos = pos + 1
+            tok = S.sample_tokens(logits, bank, pos)
+        outs.append(tok)
         return jnp.stack(outs, axis=1)
-
-    @staticmethod
-    def _sample(logits, temperature, key, i):
-        if temperature <= 0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        k = jax.random.fold_in(key, i)
-        return jax.random.categorical(k, logits / temperature).astype(jnp.int32)
 
 
 # ----------------------------------------------- continuous batching ----
-def _attention_only(cfg: ModelConfig) -> bool:
-    return all(k in ("attn", "attn_moe", "global", "local")
-               for k in cfg.block_pattern)
-
-
 class ContinuousBatchingEngine:
     """Slot-recycling serving engine: submit requests, then run().
 
-    Each engine iteration (a) admits queued requests into free slots, (b)
-    runs at most one append-at-index prefill chunk per PREFILLING slot —
-    bounded by ``ServeConfig.prefill_budget`` tokens per iteration — and
-    (c) advances every DECODING slot with one shared jitted decode step.
-    The decode step always runs all ``max_slots`` rows with an ``active``
-    mask; inactive rows (free or still prefilling) compute garbage logits
-    that are discarded host-side while their cache rows and index stay
-    untouched, which keeps the compiled shape static across the whole serve
-    lifetime.
+    Each engine iteration (a) admits queued requests into free slots —
+    writing each request's ``SamplingParams`` row into the device-resident
+    SoA sampling bank — (b) runs at most one append-at-index prefill chunk
+    per PREFILLING slot, bounded by ``ServeConfig.prefill_budget`` tokens
+    per iteration, and (c) advances every DECODING slot with one shared
+    jitted decode step. The decode step always runs all ``max_slots`` rows
+    with an ``active`` mask; inactive rows (free or still prefilling)
+    compute garbage that is masked device-side while their cache rows and
+    index stay untouched, which keeps the compiled shape static across the
+    whole serve lifetime.
+
+    With fused sampling (the default) the decode step consumes the
+    ``(max_slots,)`` last-token vector living on device, samples each
+    active slot with its own temperature/top-k/top-p/min-p and the key
+    ``fold_in(seed_key, cache position)``, and returns the next token
+    vector — the host drains only that small int32 array per step for EOS
+    checks and recording, never a ``(max_slots, vocab)`` logits block.
 
     Prefill appends directly at the slot's cache index in fixed-size
     ``prefill_chunk`` token chunks: K/V land at rows [index, index+n), pad
@@ -203,6 +328,8 @@ class ContinuousBatchingEngine:
     advances by the real chunk length. One prefill shape
     ``(1, prefill_chunk)`` is compiled for the engine's entire lifetime —
     admission never recompiles, and no pad-token K/V ever enters a slot.
+    The sampling bank is a step *value*, never a shape, so heterogeneous
+    sampling traffic cannot recompile either.
 
     With ``ServeConfig.paged_kv=True`` the per-slot contiguous
     ``(max_slots, max_seq)`` KV rows become ONE shared
@@ -221,7 +348,7 @@ class ContinuousBatchingEngine:
     """
 
     def __init__(self, cfg: ModelConfig, scfg: ServeConfig, params, *,
-                 temperature: float = 0.0, key=None):
+                 default_sampling: SamplingParams | None = None):
         if cfg.frontend != "tokens":
             raise NotImplementedError("continuous batching: token frontends")
         if cfg.cross_attn or not _attention_only(cfg):
@@ -230,7 +357,8 @@ class ContinuousBatchingEngine:
                 f"(got {cfg.block_pattern}, cross_attn={cfg.cross_attn})")
         self.cfg, self.scfg = cfg, scfg
         self.params = params
-        self.temperature, self.key = temperature, key
+        self.fused = scfg.fused_sampling
+        self.default_sampling = default_sampling
         kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
         self.paged = scfg.paged_kv
         if self.paged:
@@ -251,59 +379,59 @@ class ContinuousBatchingEngine:
                                         kv_dtype=kv_dtype)
         self.results: dict[int, list[int]] = {}
         self._steps = 0
-        self._draws = 0
+        self._submits = 0                  # drives default-policy seed + k
         self._chunk = scfg.prefill_chunk
         self._budget = scfg.prefill_budget or self._chunk
         self._table_dev = None             # device page table, re-uploaded
         self._table_version = -1           # only when the pool mutates
+        # device-resident sampling state, living next to the caches: the
+        # SoA per-slot parameter bank (admission writes one row) and the
+        # last-token vector the fused decode loop feeds back to itself
+        self.bank = S.bank_init(scfg.max_slots)
+        self._last = jnp.zeros((scfg.max_slots,), jnp.int32)
 
-        def prefill_chunk_step(params, caches, slot, tokens, lengths):
+        paged, fused = self.paged, self.fused
+
+        def prefill_chunk_step(params, caches, slot, tokens, lengths,
+                               sampling, page_row):
             """One append chunk for one slot. tokens: (1, chunk) with rows
-            >= lengths[0] as pad; slot, lengths traced, so this compiles
-            exactly once. The slot's caches are sliced out of the pool,
-            appended at their index, and written back; logits are the row
-            at lengths-1 (only meaningful for a prompt's final chunk)."""
-            slot_caches = jax.tree.map(
-                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1),
-                caches)
-            logits, slot_caches, _ = T.lm_apply(
-                params, cfg, tokens=tokens, caches=slot_caches, merged=True,
-                prefill_append=lengths, logits_index=lengths[0] - 1,
-                prefill_kernel=scfg.prefill_kernel,
-                prefill_kv_block=scfg.prefill_kv_block,
-                q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk)
-            caches = jax.tree.map(
-                lambda big, one: jax.lax.dynamic_update_slice_in_dim(
-                    big, one.astype(big.dtype), slot, axis=1),
-                caches, slot_caches)
-            return logits[:, 0], caches
-
-        def prefill_chunk_step_paged(params, caches, slot, tokens, lengths,
-                                     page_row):
-            """Paged twin: only the per-slot ``index`` leaves are
-            slot-addressed (sliced out / written back); the K/V pools are
-            shared, and the append lands on them via the slot's page-table
-            row (``page_row``: (1, max_pages)) inside the model step."""
+            >= lengths[0] as pad; slot, lengths, and the sampling bank are
+            traced, so this compiles exactly once. Contiguous caches slice
+            the whole slot out of the pool and write it back; paged caches
+            slot-address only the per-slot ``index`` leaves (the K/V pools
+            are shared — the append lands on them via ``page_row``,
+            (1, max_pages)). Fused: returns the (1,) token sampled from the
+            row at lengths-1 (only meaningful for a prompt's final chunk,
+            with the slot's own bank row sliced inside the step); legacy:
+            returns that row's logits."""
             def take(path, a):
-                if T._is_index(path):
-                    return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
-                return a
+                if paged and not T._is_index(path):
+                    return a                  # shared pool: consumed whole
+                return jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
             slot_caches = jax.tree_util.tree_map_with_path(take, caches)
-            logits, slot_caches, _ = T.lm_apply(
+            epi = None
+            if fused:
+                row = jax.tree.map(
+                    lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1,
+                                                           axis=0), sampling)
+                def epi(logits, new_caches):
+                    return S.sample_tokens(logits[:, -1], row,
+                                           T.cache_index(new_caches))
+            out, slot_caches, _ = T.lm_apply(
                 params, cfg, tokens=tokens, caches=slot_caches, merged=True,
                 prefill_append=lengths, logits_index=lengths[0] - 1,
                 prefill_kernel=scfg.prefill_kernel,
                 prefill_kv_block=scfg.prefill_kv_block,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
-                page_table=page_row)
+                page_table=page_row, logits_epilogue=epi)
             def put(path, big, one):
-                if T._is_index(path):
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        big, one.astype(big.dtype), slot, axis=1)
-                return one                    # shared pool: scatter updated
+                if paged and not T._is_index(path):
+                    return one                # shared pool: scatter updated
+                return jax.lax.dynamic_update_slice_in_dim(
+                    big, one.astype(big.dtype), slot, axis=1)
             caches = jax.tree_util.tree_map_with_path(put, caches,
                                                       slot_caches)
-            return logits[:, 0], caches
+            return (out if fused else out[:, 0]), caches
 
         _, _, decode_step, _ = make_serve_fns(cfg, scfg)
         # the engine rebinds self.caches to each result immediately, so the
@@ -311,19 +439,31 @@ class ContinuousBatchingEngine:
         # n_layers x max_slots x max_seq K/V rows (or the shared page pool)
         # in place instead of copying per call (donation is a no-op on CPU
         # smoke runs)
-        self._prefill = jax.jit(
-            prefill_chunk_step_paged if self.paged else prefill_chunk_step,
-            donate_argnums=(1,))
+        self._prefill = jax.jit(prefill_chunk_step, donate_argnums=(1,))
         self._decode = jax.jit(decode_step, donate_argnums=(1,))
         self._reset = jax.jit(
             T.reset_slot_paged if self.paged else T.reset_slot,
             donate_argnums=(0,))
 
     # --------------------------------------------------------- frontend ----
-    def submit(self, prompt, max_new_tokens: int,
-               eos_id: int | None = None) -> int:
-        """Queue a request; returns its uid (key into results after run)."""
-        return self.scheduler.submit(prompt, max_new_tokens, eos_id)
+    def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
+               sampling: SamplingParams | None = None) -> int:
+        """Queue a request; returns its uid (key into results after run).
+
+        ``sampling`` defaults to the engine's ``default_sampling``; that
+        default is a *policy*, not a shared stream — request k (in submit
+        order) derives ``seed + k``, so two default-policy requests with
+        the same prompt still sample independently. Pass an explicit
+        ``sampling`` to pin a stream exactly (identical explicit seeds
+        deliberately reproduce each other). Greedy when both are None."""
+        sp = sampling
+        if sp is None and self.default_sampling is not None:
+            sp = dataclasses.replace(
+                self.default_sampling,
+                seed=(self.default_sampling.seed + self._submits) % 2**32)
+        self._submits += 1
+        return self.scheduler.submit(prompt, max_new_tokens, eos_id,
+                                     sampling=sp)
 
     def run(self, max_steps: int | None = None) -> dict[int, list[int]]:
         """Drive admissions + decode until the queue and slots drain.
@@ -336,10 +476,15 @@ class ContinuousBatchingEngine:
         return self.results
 
     def step(self):
-        """One engine iteration: admit, prefill up to the token budget,
-        then one shared decode step for the DECODING slots."""
-        while self.scheduler.admit() is not None:
-            pass
+        """One engine iteration: admit (writing sampling-bank rows),
+        prefill up to the token budget, then one shared decode step for
+        the DECODING slots."""
+        while True:
+            admitted = self.scheduler.admit()
+            if admitted is None:
+                break
+            slot, req = admitted
+            self.bank = S.bank_put(self.bank, slot, req.sampling)
         plan = self.scheduler.prefill_plan(self._chunk, self._budget)
         for slot, start, n in plan:
             self._prefill_one(slot, start, n)
@@ -358,7 +503,7 @@ class ContinuousBatchingEngine:
     @property
     def decode_cache_size(self) -> int:
         """Compiled decode variants so far (1 for the whole lifetime: the
-        page table is a value, never a shape)."""
+        page table and the sampling bank are values, never shapes)."""
         return self._decode._cache_size()
 
     @property
@@ -380,36 +525,68 @@ class ContinuousBatchingEngine:
     def _prefill_one(self, slot: int, start: int, n: int):
         prompt = self.scheduler.slots[slot].request.prompt
         chunk = prompt[start:start + n] + [0] * (self._chunk - n)
-        args = (self.params, self.caches, jnp.asarray(slot, jnp.int32),
-                jnp.asarray(chunk, jnp.int32)[None, :],
-                jnp.asarray([n], jnp.int32))
+        page_row = None
         if self.paged:
             # map pages for rows [0, start + n) before the device write
             self.pool.ensure(slot, start + n)
-            args += (self._device_table()[slot:slot + 1],)
-        logits, self.caches = self._prefill(*args)
+            page_row = self._device_table()[slot:slot + 1]
+        out, self.caches = self._prefill(
+            self.params, self.caches, jnp.asarray(slot, jnp.int32),
+            jnp.asarray(chunk, jnp.int32)[None, :],
+            jnp.asarray([n], jnp.int32), self.bank if self.fused else None,
+            page_row)
         if self.scheduler.record_prefill(slot, n):
-            # prompt complete: sample the first output token
-            tok = int(self._sample(logits)[0])
+            # prompt complete: the chunk's output is the first token of the
+            # request (sampled in-step when fused; from logits otherwise)
+            if self.fused:
+                tok = int(out[0])
+                self._last = self._last.at[slot].set(tok)
+            else:
+                state = self.scheduler.slots[slot]
+                tok = int(S.sample_tokens(
+                    out, S.bank_take(self.bank, slice(slot, slot + 1)),
+                    jnp.asarray([state.filled], jnp.int32))[0])
             if self.scheduler.record(slot, tok):
                 self._finish(slot)
 
     def _decode_once(self):
-        toks = np.zeros((self.scfg.max_slots, 1), np.int32)
+        decoding = self.scheduler.decoding()
         active = np.zeros((self.scfg.max_slots,), bool)
-        for slot, state in self.scheduler.decoding():
-            toks[slot, 0] = state.last_token
+        for slot, state in decoding:
             active[slot] = True
             if self.paged:
                 # this step writes the last sampled token's K/V at row
                 # filled + generated - 1; make sure that row has a page
                 self.pool.ensure(slot, state.filled + len(state.generated))
-        inputs = {"tokens": jnp.asarray(toks), "active": jnp.asarray(active)}
-        if self.paged:
-            inputs["page_table"] = self._device_table()
-        logits, self.caches = self._decode(self.params, self.caches, inputs)
-        sampled = np.asarray(self._sample(logits))
-        for slot, _ in self.scheduler.decoding():
+        if self.fused:
+            # device-side feedback: last tokens in, next tokens out — the
+            # only host traffic is draining the (max_slots,) token vector
+            inputs = {"tokens": self._last, "active": jnp.asarray(active)}
+            if self.paged:
+                inputs["page_table"] = self._device_table()
+            self._last, self.caches = self._decode(self.params, self.caches,
+                                                   inputs, self.bank)
+            sampled = np.asarray(self._last)
+        else:
+            # legacy A/B baseline: ship (max_slots, vocab) logits to the
+            # host and sample there — through the SAME per-slot schedule
+            toks = np.zeros((self.scfg.max_slots, 1), np.int32)
+            for slot, state in decoding:
+                toks[slot, 0] = state.last_token
+            inputs = {"tokens": jnp.asarray(toks),
+                      "active": jnp.asarray(active)}
+            if self.paged:
+                inputs["page_table"] = self._device_table()
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               inputs)
+            rows = np.asarray([slot for slot, _ in decoding])
+            pos = jnp.asarray([st.filled + len(st.generated)
+                               for _, st in decoding], jnp.int32)
+            drawn = S.sample_tokens(logits[rows], S.bank_take(self.bank,
+                                                              rows), pos)
+            sampled = np.zeros((self.scfg.max_slots,), np.int32)
+            sampled[rows] = np.asarray(drawn)
+        for slot, _ in decoding:
             if self.scheduler.record(slot, int(sampled[slot])):
                 self._finish(slot)
 
@@ -418,23 +595,14 @@ class ContinuousBatchingEngine:
         self.results[uid] = generated
         self.caches = self._reset(self.caches, jnp.asarray(slot, jnp.int32))
 
-    def _sample(self, logits):
-        if self.temperature <= 0 or self.key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        # per-draw fold: prefill completions and decode within one engine
-        # iteration must not share a key, or same-prompt slots sample
-        # identically
-        self._draws += 1
-        k = jax.random.fold_in(self.key, self._draws)
-        return jax.random.categorical(
-            k, logits / self.temperature).astype(jnp.int32)
-
 
 # --------------------------------------------------- dry-run entry point ----
 def make_decode_for_dryrun(cfg: ModelConfig, seq_len: int):
     """serve_step(params, caches, tokens) with the cache index pinned at
-    seq_len-1 — the decode_32k / long_500k cell semantics."""
-    scfg = ServeConfig(max_seq=seq_len)
+    seq_len-1 — the decode_32k / long_500k cell semantics. The dryrun cells
+    keep the logits-returning steps (fused_sampling=False): they measure and
+    shard the (batch, vocab) logits surface itself."""
+    scfg = ServeConfig(max_seq=seq_len, fused_sampling=False)
     _, _, decode_step, _ = make_serve_fns(cfg, scfg)
 
     def serve_step(params, caches, batch_inputs):

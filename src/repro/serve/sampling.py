@@ -1,0 +1,195 @@
+"""Device-resident per-slot sampling: the serving epilogue.
+
+Before this subsystem, every decode step ended host-side: the jitted step
+returned a ``(max_slots, vocab)`` logits array, the engine transferred it,
+sampled with ONE global temperature, and looped over slots in Python — the
+last unfused, host-bound stage of the serving path. Here the whole
+logits→token epilogue (temperature scale → top-k/top-p/min-p mask →
+categorical) runs inside the jitted prefill/decode steps, over per-slot
+parameters, so a step returns a ``(max_slots,)`` int32 token vector and the
+host only drains that small array for EOS checks and recording.
+
+Three pieces:
+
+* ``SamplingParams`` — the per-request knobs (temperature, top_k, top_p,
+  min_p, seed), validated at construction and carried through
+  ``Scheduler.submit`` / slot state.
+* **Parameter banks** — the SoA device mirror: one ``(max_slots,)`` array
+  per knob, living next to the KV caches. Admission writes one row
+  (``bank_put``); the jitted steps consume the bank as a *value*, never a
+  shape, so heterogeneous sampling traffic compiles exactly one step.
+* ``sample_tokens`` — the fused epilogue. Each slot draws with the key
+  ``fold_in(slot_seed_key, position)`` where ``position`` is the slot's
+  cache fill level at sampling time (prompt + generated so far). A
+  request's random stream is therefore a pure function of its own
+  ``(seed, prompt length, step)`` — reproducible regardless of which other
+  requests share the batch, which slot it landed in, or how admissions
+  interleaved (the bug in the old host sampler: a single global
+  ``fold_in(key, draws_so_far)`` made every request's tokens depend on
+  co-resident traffic).
+
+Mask semantics (exact-tested against a numpy oracle in
+``tests/test_sampling.py``):
+
+* ``top_k``  — keep scores >= the k-th largest (ties included);
+  ``top_k <= 0`` disables.
+* ``top_p``  — nucleus: sort descending, keep every token whose
+  *exclusive* cumulative softmax mass is <= top_p (the top-1 token always
+  survives); ``top_p >= 1`` disables.
+* ``min_p``  — keep tokens with prob >= min_p * max prob, i.e. score >=
+  max_score + log(min_p); ``min_p <= 0`` disables (log 0 = -inf threshold).
+
+All three mask the *temperature-scaled* scores. ``temperature <= 0`` means
+greedy argmax of the raw logits (masks irrelevant by construction: the
+argmax token survives every mask).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import random
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling knobs. ``temperature=0`` = greedy; ``top_k=0``,
+    ``top_p=1``, ``min_p=0`` = the respective mask disabled. ``seed`` fully
+    determines the request's random stream (together with its own prompt
+    length and step — never co-resident traffic)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    min_p: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(
+                f"SamplingParams: temperature ({self.temperature}) must be "
+                ">= 0 (0 = greedy)")
+        if self.top_k < 0:
+            raise ValueError(
+                f"SamplingParams: top_k ({self.top_k}) must be >= 0 "
+                "(0 = disabled)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"SamplingParams: top_p ({self.top_p}) must be in (0, 1] "
+                "(1 = disabled)")
+        if not 0.0 <= self.min_p < 1.0:
+            raise ValueError(
+                f"SamplingParams: min_p ({self.min_p}) must be in [0, 1) "
+                "(0 = disabled)")
+        if not 0 <= self.seed < 2**32:
+            raise ValueError(
+                f"SamplingParams: seed ({self.seed}) must fit in uint32")
+
+
+GREEDY = SamplingParams()
+
+# SoA bank layout: one (n,) device array per knob. Seeds are uint32 so the
+# whole int seed range folds into the key derivation losslessly.
+_FIELDS = (("temperature", jnp.float32), ("top_k", jnp.int32),
+           ("top_p", jnp.float32), ("min_p", jnp.float32),
+           ("seed", jnp.uint32))
+
+
+def bank_init(n: int) -> dict:
+    """Greedy-initialized SoA parameter bank for ``n`` slots."""
+    return {name: jnp.full((n,), getattr(GREEDY, name), dt)
+            for name, dt in _FIELDS}
+
+
+def bank_put(bank: dict, slot: int, sp: SamplingParams | None) -> dict:
+    """Write one slot's row (admission-time; ``None`` = greedy)."""
+    sp = sp if sp is not None else GREEDY
+    return {name: bank[name].at[slot].set(getattr(sp, name))
+            for name, _ in _FIELDS}
+
+
+def bank_of(sp, n: int) -> dict:
+    """Bank from a single ``SamplingParams`` (broadcast to ``n`` rows — row
+    r draws from ``seed + r``, so rows sample INDEPENDENT streams rather
+    than n copies of one) or a per-row sequence of them (seeds used exactly
+    as given: identical seeds deliberately share a stream)."""
+    if sp is None:
+        sp = GREEDY
+    if isinstance(sp, SamplingParams):
+        sps = [dataclasses.replace(sp, seed=(sp.seed + i) % 2**32)
+               for i in range(n)]
+    else:
+        sps = list(sp)
+        if len(sps) != n:
+            raise ValueError(
+                f"bank_of: {len(sps)} SamplingParams for {n} rows")
+    return {name: jnp.asarray([getattr(s, name) for s in sps], dt)
+            for name, dt in _FIELDS}
+
+
+def bank_take(bank: dict, rows) -> dict:
+    """Gather bank rows (host-path sampling over a slot subset)."""
+    return {name: bank[name][rows] for name, _ in _FIELDS}
+
+
+# ------------------------------------------------------------- epilogue ----
+def apply_logits_masks(scores, top_k, top_p, min_p):
+    """Mask (b, v) temperature-scaled scores to the per-row sampling
+    support; out-of-support entries become -inf. Disabled sentinels
+    (top_k<=0, top_p>=1, min_p<=0) keep the full row. The row max always
+    survives all three masks, so the masked row is never all -inf."""
+    v = scores.shape[-1]
+    sorted_desc = -jnp.sort(-scores, axis=-1)
+    # top-k: keep scores >= the k-th largest (ties included)
+    k = jnp.clip(top_k, 1, v)
+    kth = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    keep = (scores >= kth) | (top_k <= 0)[:, None]
+    # top-p: keep the minimal descending prefix whose exclusive cumulative
+    # softmax mass stays <= top_p, mapped back through the value cutoff
+    probs = jax.nn.softmax(sorted_desc, axis=-1)
+    excl = jnp.cumsum(probs, axis=-1) - probs
+    in_nucleus = excl <= top_p[:, None]
+    cutoff = jnp.min(jnp.where(in_nucleus, sorted_desc, jnp.inf),
+                     axis=-1, keepdims=True)
+    keep &= (scores >= cutoff) | (top_p >= 1.0)[:, None]
+    # min-p: prob >= min_p * max prob  <=>  score >= max + log(min_p)
+    # (min_p = 0 -> threshold -inf -> disabled, no explicit gate needed)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    keep &= scores >= mx + jnp.log(min_p)[:, None]
+    return jnp.where(keep, scores, -jnp.inf)
+
+
+def slot_keys(seeds, positions):
+    """(b,) per-slot draw keys: ``fold_in(slot_seed_key, position)``. The
+    slot-seed key is itself ``fold_in(key(0), seed)`` so any uint32 seed
+    yields an independent stream; folding the cache position makes draw t
+    of a request a pure function of (seed, prompt_len + t)."""
+    def one(seed, pos):
+        return random.fold_in(random.fold_in(random.key(0), seed), pos)
+    return jax.vmap(one)(seeds, positions)
+
+
+def sample_tokens(logits, bank, positions):
+    """The fused logits→token epilogue: (b, v) logits + SoA ``bank`` +
+    (b,) cache positions -> (b,) int32 tokens. Rows with
+    ``temperature <= 0`` take the raw argmax; the rest draw categorically
+    from the temperature-scaled, top-k/top-p/min-p-masked scores with
+    per-slot keys. An all-greedy batch (the bank default) short-circuits
+    past the vocab sort / softmax / draw entirely via ``lax.cond`` — the
+    bank is a runtime value, so the skip costs mixed batches nothing.
+    Runs identically inside a jitted step (fused serving) and eagerly on
+    transferred logits (the host A/B path)."""
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    t = bank["temperature"]
+
+    def draw(_):
+        scaled = lf / jnp.where(t > 0, t, 1.0)[:, None]
+        masked = apply_logits_masks(scaled, bank["top_k"], bank["top_p"],
+                                    bank["min_p"])
+        keys = slot_keys(bank["seed"], positions)
+        drawn = jax.vmap(random.categorical)(keys, masked).astype(jnp.int32)
+        return jnp.where(t > 0, drawn, greedy)
+
+    return jax.lax.cond(jnp.any(t > 0), draw, lambda _: greedy, None)

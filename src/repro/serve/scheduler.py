@@ -18,7 +18,8 @@ token; the engine then samples the first output token from the last chunk's
 logits and the slot joins the decode batch.
 
 This module is pure Python bookkeeping: who sits where, what was generated,
-when a slot frees up — plus, for paged KV serving, ``PagePool``: the int32
+which sampling params a request carries (opaquely — the engine mirrors them
+into its device-resident bank at admission), when a slot frees up — plus, for paged KV serving, ``PagePool``: the int32
 free-list allocator that maps each slot's logical KV rows onto shared pool
 pages and gates admission on worst-case reservations. All device work
 (chunked prefill, decode, cache updates) lives in
@@ -143,6 +144,11 @@ class Request:
     prompt: list[int]
     max_new_tokens: int
     eos_id: int | None = None
+    # per-request serve/sampling.SamplingParams (None = greedy). Held
+    # opaquely — the scheduler never reads its fields, so this module stays
+    # framework-free; the engine mirrors it into the device bank at
+    # admission time.
+    sampling: object | None = None
 
 
 @dataclass
@@ -184,7 +190,7 @@ class Scheduler:
 
     # ------------------------------------------------------- admission ----
     def submit(self, prompt, max_new_tokens: int,
-               eos_id: int | None = None) -> int:
+               eos_id: int | None = None, sampling=None) -> int:
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
@@ -193,7 +199,8 @@ class Scheduler:
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq ({self.max_seq})")
         uid = next(self._uids)
-        self.queue.append(Request(uid, prompt, max_new_tokens, eos_id))
+        self.queue.append(Request(uid, prompt, max_new_tokens, eos_id,
+                                  sampling))
         return uid
 
     def free_slot(self) -> int | None:

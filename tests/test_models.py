@@ -78,7 +78,9 @@ def test_decode_consistency(arch):
 
     from repro.serve.engine import make_serve_fns
     from repro.configs.base import ServeConfig
-    ic, pf, dc, _ = make_serve_fns(cfg, ServeConfig(max_seq=64))
+    # fused_sampling=False: this test inspects the raw logits surface
+    ic, pf, dc, _ = make_serve_fns(cfg, ServeConfig(max_seq=64,
+                                                    fused_sampling=False))
     caches = ic(b)
     pre_in = {k: (v[:, :s] if k in ("tokens", "embeds") else v)
               for k, v in kw.items()}

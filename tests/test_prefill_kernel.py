@@ -256,15 +256,19 @@ def test_decode_step_jaxpr_has_no_full_cache_transpose():
     """The satellite fix, verified at the IR level: with the split-KV
     kernel on, the decode step's jaxpr contains no transpose (or pad) of a
     cache-sized array — the old wrapper re-transposed the whole
-    (b, L, hkv, dk) cache on EVERY token step."""
+    (b, L, hkv, dk) cache on EVERY token step. Checked on the PRODUCTION
+    step, i.e. with the fused sampling epilogue in the jaxpr too."""
+    from repro.serve import sampling as S
     cfg, p = _model("qwen2-1.5b")
     max_slots, max_seq = 4, 2048
     scfg = ServeConfig(max_seq=max_seq, max_slots=max_slots,
                        decode_kernel=True)
     init_caches, _, decode_step, _ = make_serve_fns(cfg, scfg)
     caches = init_caches(max_slots)
-    inputs = {"tokens": jnp.zeros((max_slots, 1), jnp.int32)}
-    jaxpr = jax.make_jaxpr(decode_step)(p, caches, inputs)
+    inputs = {"tokens": jnp.zeros((max_slots,), jnp.int32),
+              "active": jnp.ones((max_slots,), bool)}
+    jaxpr = jax.make_jaxpr(decode_step)(p, caches, inputs,
+                                        S.bank_init(max_slots))
     cells = max_slots * max_seq * cfg.n_kv_heads * cfg.head_dim_
     assert cells > cfg.vocab_size * cfg.d_model  # dominates any param/logit
     bad = _cache_sized_ops(jaxpr.jaxpr, cells)

@@ -38,7 +38,8 @@ def test_cross_attn_generation_runs():
 def test_decode_index_advances_per_layer_consistently():
     cfg = get_config("granite-3-2b", smoke=True)
     p = T.lm_init(Ctx(random.key(0)), cfg)
-    ic, pf, dc, _ = make_serve_fns(cfg, ServeConfig(max_seq=32))
+    ic, pf, dc, _ = make_serve_fns(cfg, ServeConfig(max_seq=32,
+                                                    fused_sampling=False))
     caches = ic(2)
     toks = random.randint(random.key(4), (2, 8), 0, cfg.vocab_size)
     _, caches = pf(p, caches, {"tokens": toks})
