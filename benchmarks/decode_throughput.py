@@ -19,7 +19,12 @@ Four measurements:
   contiguous rows and on the page pool.
 * **step** — wall time of one jitted decode step at a pinned cache length,
   jnp row attention vs the split-KV Pallas kernel (interpret mode on CPU;
-  the kernel numbers are architecture-mirrors, not CPU speedups).
+  the kernel numbers are architecture-mirrors, not CPU speedups), plus a
+  **fill sweep** on the ``L4096_b8_splitkv`` acceptance shape: the
+  fill-bounded kernel grid vs the capacity-swept baseline at quarter and
+  full fill (``decode_step_fill_us``). The full-fill gap is the bounded
+  kernel's batch-fold (per-program overhead amortized across slots); the
+  extra quarter-fill gap on top of it is fill bounding proper.
 * **paged** (``--paged``) — paged-vs-contiguous engine tok/s with peak page
   occupancy on the same queue, plus one decode step of the ``long_500k``
   shape served from a page pool holding FEWER total KV cells than
@@ -115,7 +120,10 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
     useful = serve()
     dt = time.perf_counter() - t0
     occ = (eng.pool.peak_in_use / scfg.num_pages) if paged else 0.0
-    return useful / dt, occ
+    # peak committed (reserved) pages: includes reserved-but-unmapped
+    # pressure that occupancy can't see — the quantity gating admission
+    resv = (eng.pool.peak_reserved / scfg.num_pages) if paged else 0.0
+    return useful / dt, occ, resv
 
 
 def _prefill_step_tok_s(cfg, params, prefill_kernel, paged=False, chunk=8,
@@ -168,16 +176,21 @@ def _pin_index(caches, value, slot=None):
     return tree_map_with_path(pin, caches)
 
 
-def _step_us(cfg, params, batch, cache_len, decode_kernel, fused=False):
+def _step_us(cfg, params, batch, cache_len, decode_kernel, fused=False,
+             fill=None, fill_bound=True):
     """One jitted decode step at a pinned cache length. ``fused=True``
     measures the production token-emitting step (sampling epilogue inside,
     (batch,) int32 out); ``fused=False`` the legacy logits-returning step —
     the pair isolates the epilogue's device cost from the engine-level
-    host-transfer savings."""
+    host-transfer savings. ``fill`` pins the per-slot index below capacity
+    (default: capacity) and ``fill_bound=False`` sweeps the full
+    capacity-sized KV grid regardless of fill — the A/B pair behind the
+    ``decode_step_fill_us`` rows."""
     scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel,
-                       fused_sampling=fused)
+                       fused_sampling=fused, fill_bound=fill_bound)
     init_caches, _, decode_step, _ = make_serve_fns(cfg, scfg)
-    caches = _pin_index(init_caches(batch), cache_len - 1)
+    caches = _pin_index(init_caches(batch),
+                        (cache_len if fill is None else fill) - 1)
     if fused:
         args = (params, caches, {"tokens": jnp.zeros((batch,), jnp.int32)},
                 S.bank_init(batch))
@@ -234,7 +247,8 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
     producing a quietly thinner BENCH_serve.json."""
     for key, typ in (("arch", str), ("mode", str), ("paged", bool),
                      ("decode_tok_s", dict), ("prefill_tok_s", dict),
-                     ("decode_step_us", dict), ("page_occupancy", dict)):
+                     ("decode_step_us", dict), ("decode_step_fill_us", dict),
+                     ("page_occupancy", dict)):
         assert isinstance(report.get(key), typ), (
             f"BENCH_serve.json schema: missing/mistyped {key!r}")
     num = (int, float)
@@ -255,9 +269,22 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
                       f"L{L}_b{b}_fused"):
                 assert isinstance(report["decode_step_us"].get(k), num), (
                     f"BENCH_serve.json schema: decode_step_us[{k!r}] missing")
+    # fill-sweep rows run in every mode on the acceptance shape: losing them
+    # means the fill-bounded path silently stopped being measured
+    for frac in ("25", "100"):
+        for kind in ("capacity", "bounded", "speedup"):
+            k = f"L4096_b8_fill{frac}_{kind}"
+            assert isinstance(report["decode_step_fill_us"].get(k), num), (
+                f"BENCH_serve.json schema: decode_step_fill_us[{k!r}] "
+                "missing — the fill-bounded vs capacity-swept A/B is part "
+                "of the artifact")
     if paged:
         assert isinstance(report.get("long_500k_step_us"), num), (
             "BENCH_serve.json schema: long_500k_step_us missing in --paged")
+        for n in batches:
+            for k in (f"engine_b{n}_peak", f"engine_b{n}_peak_reserved"):
+                assert isinstance(report["page_occupancy"].get(k), num), (
+                    f"BENCH_serve.json schema: page_occupancy[{k!r}] missing")
 
 
 def run(arch="qwen2-1.5b", *, full=False, paged=False,
@@ -267,8 +294,8 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
     rows = []
     report = {"arch": arch, "mode": "full" if full else "quick",
               "paged": paged, "decode_tok_s": {}, "prefill_tok_s": {},
-              "decode_step_us": {}, "page_occupancy": {},
-              "long_500k_step_us": None}
+              "decode_step_us": {}, "decode_step_fill_us": {},
+              "page_occupancy": {}, "long_500k_step_us": None}
 
     # ---- engine: static vs continuous on the same request queue ----
     batches = (1, 8, 64) if full else (1, 4, 8)
@@ -277,14 +304,14 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
         max_seq = 48
         slots = min(4, n)
         st = _static_toks_per_s(cfg, params, reqs, max_seq)
-        co, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
-                                       False)
-        ck, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
-                                       True)
+        co, _, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                          False)
+        ck, _, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                          True)
         # host-sampling baseline: same engine, logits shipped per token and
         # sampled host-side (the pre-fused-epilogue serving path)
-        ho, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
-                                       False, fused=False)
+        ho, _, _ = _continuous_toks_per_s(cfg, params, reqs, max_seq, slots,
+                                          False, fused=False)
         rows.append((f"serve/static_b{n}_tok_s", f"{st:.1f}", "useful_tokens"))
         rows.append((f"serve/continuous_b{n}_tok_s", f"{co:.1f}",
                      f"slots={slots};fused_sampling"))
@@ -301,14 +328,17 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
         report["decode_tok_s"][f"continuous_kernel_b{n}"] = ck
         report["decode_tok_s"][f"continuous_hostsample_b{n}"] = ho
         if paged:
-            pg, occ = _continuous_toks_per_s(cfg, params, reqs, max_seq,
-                                             slots, False, paged=True)
+            pg, occ, resv = _continuous_toks_per_s(cfg, params, reqs,
+                                                   max_seq, slots, False,
+                                                   paged=True)
             rows.append((f"serve/paged_b{n}_tok_s", f"{pg:.1f}",
-                         f"slots={slots};peak_occupancy={occ:.2f}"))
+                         f"slots={slots};peak_occupancy={occ:.2f};"
+                         f"peak_reserved={resv:.2f}"))
             rows.append((f"serve/paged_b{n}_vs_contiguous", f"{pg/co:.3f}x",
                          "same_queue"))
             report["decode_tok_s"][f"paged_b{n}"] = pg
             report["page_occupancy"][f"engine_b{n}_peak"] = occ
+            report["page_occupancy"][f"engine_b{n}_peak_reserved"] = resv
 
     # ---- prefill: chunked append step tok/s, jnp KV walk vs fused kernel ----
     # chunk 128 against a 1024-row cache at mid-fill: big enough that the
@@ -343,6 +373,26 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
             report["decode_step_us"][f"L{L}_b{b}_row"] = us_row
             report["decode_step_us"][f"L{L}_b{b}_splitkv"] = us_ker
             report["decode_step_us"][f"L{L}_b{b}_fused"] = us_fus
+
+    # ---- fill sweep: fill-bounded vs capacity-swept split-KV grids ----
+    # the acceptance shape (L4096_b8_splitkv) at quarter and full fill,
+    # run in EVERY mode: a capacity-sized grid pays the same no matter the
+    # fill, a fill-bounded grid pays for live KV shards only (plus the
+    # batch-fold's per-program amortization, which also shows at full fill)
+    FL, FB = 4096, 8
+    for frac, fill in (("25", FL // 4), ("100", FL)):
+        cap = _step_us(cfg, params, FB, FL, True, fill=fill,
+                       fill_bound=False)
+        bnd = _step_us(cfg, params, FB, FL, True, fill=fill,
+                       fill_bound=True)
+        rows.append((f"serve/step_L{FL}_b{FB}_fill{frac}_capacity_us",
+                     f"{cap:.0f}", "capacity_swept_grid"))
+        rows.append((f"serve/step_L{FL}_b{FB}_fill{frac}_bounded_us",
+                     f"{bnd:.0f}", f"{cap/bnd:.2f}x_vs_capacity"))
+        report["decode_step_fill_us"][f"L{FL}_b{FB}_fill{frac}_capacity"] = cap
+        report["decode_step_fill_us"][f"L{FL}_b{FB}_fill{frac}_bounded"] = bnd
+        report["decode_step_fill_us"][f"L{FL}_b{FB}_fill{frac}_speedup"] = (
+            cap / bnd)
 
     # ---- paged: the long_500k shape on a sub-contiguous page pool ----
     if paged:

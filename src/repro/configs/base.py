@@ -169,6 +169,11 @@ class ServeConfig:
                                      # (contiguous and paged)
     prefill_kv_block: int = 512      # KV shard size for the prefill kernel
                                      # grid (contiguous caches)
+    fill_bound: bool = True          # bound the serving kernels' KV grids
+                                     # by the traced per-slot fill instead
+                                     # of cache capacity (fill stays a
+                                     # value — no extra compiled shape);
+                                     # False = capacity-swept A/B baseline
     score_norm: Optional[str] = None # the served model's score_norm, when
                                      # known at config time: lets the kernel
                                      # flags fail at CONSTRUCTION on a

@@ -400,7 +400,8 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     q_chunk: int = 2048, kv_chunk: int = 1024,
                     decode_kernel: bool = False, decode_kv_block: int = 256,
                     prefill_kernel: bool = False, prefill_kv_block: int = 512,
-                    prefill_append=None, decode_active=None, page_table=None):
+                    fill_bound: bool = True, prefill_append=None,
+                    decode_active=None, page_table=None):
     """Self- or cross-attention over x: (b, s, d).
 
     cache: None (train/prefill) or dict(k, v, index) for one-token decode.
@@ -410,6 +411,10 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     prefill_kernel: route chunked consmax append prefill (contiguous and
     paged) through the fused Pallas kernel (kernels/consmax_prefill)
     instead of the jnp KV walk; ``prefill_kv_block`` sizes its KV shards.
+    fill_bound: bound the serving kernels' KV grid work by the traced fill
+    level (per-slot cache ``index``) instead of cache capacity — fill stays
+    a value, never a shape, so the compiled step is shared across fills.
+    False keeps the capacity-swept grids for A/B benchmarking.
     prefill_append: (b,) int32 — chunked prefill: x is a fixed-size chunk
     appended at the cache's per-slot ``index``; the entry gives the real
     (non-pad) token count per slot. Pad rows' K/V are zeroed before the
@@ -481,7 +486,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0)
+                scale=1.0, fill_bound=fill_bound)
         elif (prefill_append is None and decode_kernel
                 and cfg.score_norm == "consmax"):
             from repro.kernels.consmax_decode.ops import consmax_decode_paged_op
@@ -490,7 +495,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0)
+                scale=1.0, fill_bound=fill_bound)
         else:
             out = paged_attention(
                 q, kp, vp, page_table, idx, lengths,
@@ -526,7 +531,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0, bk=prefill_kv_block)
+                scale=1.0, bk=prefill_kv_block, fill_bound=fill_bound)
         else:
             out = append_attention(
                 q, k_cache.astype(cdt), v_cache.astype(cdt), idx, lengths,
@@ -601,7 +606,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                     jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                     window=window, softcap=cfg.attn_softcap, merged=merged,
-                    scale=1.0, bk=decode_kv_block)
+                    scale=1.0, bk=decode_kv_block, fill_bound=fill_bound)
             else:
                 out = decode_attention(q, k_cache.astype(cdt),
                                        v_cache.astype(cdt), idx,

@@ -18,9 +18,21 @@ materialized. Everything both kernel families agree on lives here:
   absolute position ``qpos`` sees cache row ``kpos`` iff ``kpos < kv_len``,
   ``qpos >= kpos`` and (local layers) ``qpos - kpos < window``.
 * ``consmax_weights`` — Eq. 2 / merged Eq. 3 of the paper.
+* ``live_blocks`` / ``shard_live`` / ``fill_bounded_sum`` — the fill
+  bounding shared by the decode AND prefill kernels: serving caches are
+  allocated at *capacity* but filled to the per-slot ``index``, and ConSmax
+  shard partials are order-free and skippable (no running max, no
+  denominator), so a KV shard that ``kv_mask`` would zero anyway can simply
+  not run. ``live_blocks`` clamps a kernel's KV grid axis to the traced
+  batch-max shard count (a *value* — the compiled shape never changes with
+  fill), ``shard_live`` is the per-program ``pl.when`` predicate (per-slot
+  fill, causal reach, window reach), and ``fill_bounded_sum`` is the
+  caller-side combine that touches only the live prefix of the partials
+  buffer (slots beyond it are never written by the clamped grid).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -100,6 +112,59 @@ def kv_mask(qpos, kpos, kv_len, window: int):
     if window > 0:
         mask = mask & ((qpos - kpos) < window)
     return mask
+
+
+def live_blocks(max_kv_len, block: int, n_cap: int):
+    """Traced count of ``block``-row KV shards holding any valid cache row.
+
+    ``max_kv_len`` is the batch-max fill level (a traced value inside the
+    jitted serving steps); the result clamps a kernel's KV grid axis so
+    programs beyond the fill never launch. Bounded to [1, n_cap]: the grid
+    must stay non-empty and never exceed the capacity-sized partials
+    allocation. Fill stays a *value* — one compiled step serves every fill
+    level."""
+    return jnp.clip((max_kv_len + block - 1) // block, 1, n_cap)
+
+
+def shard_live(start, size: int, kv_len, *, qpos_hi=None, qpos_lo=None,
+               window: int = 0):
+    """True iff cache rows [start, start + size) can contribute a non-zero
+    partial for any query in [qpos_lo, qpos_hi] — the per-program skip
+    predicate of the fill-bounded kernels, the grid-level complement of
+    ``kv_mask``:
+
+    * ``start < kv_len`` — the shard holds at least one *filled* row,
+    * ``start <= qpos_hi`` — at least one row is causally visible,
+    * window reach — the shard's last row is not entirely behind the
+      sliding window of the block's earliest query.
+
+    A shard that fails computes only masked-to-zero weights; ConSmax makes
+    skipping it a pure zero-write (partials combine by addition — there is
+    no rescale or denominator a skipped shard would owe)."""
+    live = start < kv_len
+    if qpos_hi is not None:
+        live &= start <= qpos_hi
+    if window > 0 and qpos_lo is not None:
+        live &= (start + size) > (qpos_lo - window + 1)
+    return live
+
+
+def fill_bounded_sum(partials, n_live, axis: int = 2):
+    """Sum ``partials`` along ``axis``, treating slots >= ``n_live`` as
+    exact zeros.
+
+    ``n_live`` may be traced (the ``live_blocks`` clamp): slots at or
+    beyond it were *never written* by the clamped grid, so they are
+    ``where``-selected to 0.0 (a select, not arithmetic — uninitialized
+    garbage, even NaN, never propagates) before the same capacity-shaped
+    ``jnp.sum`` the capacity-swept path uses. The reduction tree is
+    therefore identical in both paths, and a capacity-swept kernel writes
+    exact zeros into dead-shard slots anyway (fully masked weights), so
+    bounded and unbounded outputs are bit-identical."""
+    shape = [1] * partials.ndim
+    shape[axis] = partials.shape[axis]
+    live = jax.lax.broadcasted_iota(jnp.int32, tuple(shape), axis) < n_live
+    return jnp.sum(jnp.where(live, partials, 0.0), axis=axis)
 
 
 def consmax_weights(s, beta, gamma, merged: bool):

@@ -26,13 +26,45 @@ Per (batch, kv-head, kv-shard) program:
     p = exp(s - beta) / gamma      (VPU; masked by per-slot length)
     o = p @ v                      (MXU; partial, summed across shards later)
 
+**Fill bounding** (``fill_bound=True``, the default): serving caches are
+allocated at capacity but filled to the per-slot ``lengths``, and the old
+grid paid a program (and a partials slot) for every capacity shard. The KV
+grid axis is now clamped to the traced *batch-max* live shard count
+(``cache_layout.live_blocks`` — a value, so one compiled step serves every
+fill level), each program ``pl.when``-skips shards the per-slot lengths (or
+the sliding window) already zero — writing exact zeros to its partial
+slot instead of masking a full compute — and the caller-side combine
+(``cache_layout.fill_bounded_sum``) touches only the live prefix of the
+capacity-sized partials buffer; slots beyond it are never written or read.
+ConSmax is what makes the skip this simple: a dead shard owes no rescale
+and no denominator term, so "skip" is literally "contribute zero".
+``fill_bound=False`` keeps the capacity-swept grid — the before/after
+baseline for the benchmark's fill sweep.
+
+The contiguous bounded kernel additionally *folds the batch into the
+block*: a decode program's per-shard compute is a (g, bk) score tile — so
+small that per-program pipeline overhead (block DMA setup on TPU, the
+full-operand grid sweep in interpret mode) dominates the actual math. The
+bounded grid is therefore ``(b/bf, hkv, ns_live)`` with ``bf`` slots
+(largest divisor of b <= 8, VMEM-bounded) stacked in every block: the
+per-program overhead is amortized ``bf``-fold and the batched dot is
+bit-identical to ``bf`` per-slot dots. The ``pl.when`` skip then fires per
+(slot-group, shard) — a shard past every folded slot's fill (or behind
+every window) still writes zeros without computing — and per-slot raggedness
+inside a live group is handled by the same length mask as before, which is
+exactly what the capacity sweep computed for those lanes. The paged variant
+keeps the per-slot grid: its page-table gather is a per-(slot, page) index
+map that a folded block cannot express.
+
 GQA is folded into the q rows: the g = n_heads/n_kv_heads query heads that
 share one KV head form the (g, d) left operand, so the score tile is (g, bk)
 — well shaped for the MXU even though a decode step has a single token.
 
 VMEM per program @ (g, bk, d) = (8, 256, 128) fp32: q g·d·4 + k/v 2·bk·d·4 +
 s/p 2·g·bk·4 + out g·d·4 ≈ 0.3 MB — tiny; the Mosaic pipeline double-buffers
-KV shards from HBM.
+KV shards from HBM. The folded bounded kernel multiplies the block set by
+``bf``, and ``_fold_factor`` caps the fold so each K/V block stays under
+2 MB — comfortably double-bufferable.
 """
 from __future__ import annotations
 
@@ -51,8 +83,7 @@ from repro.kernels import cache_layout as CL
 def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
             scale: float, window: int, softcap: float, bk: int, g: int,
             merged: bool):
-    ik = pl.program_id(2)
-
+    n = len_ref[0, 0]                                # valid kv count (<= L)
     q = q_ref[0, 0]                                  # (g, d)
     k = k_ref[0, :, 0].astype(q.dtype)               # (bk, d) — cache layout
     v = v_ref[0, :, 0].astype(q.dtype)
@@ -61,8 +92,8 @@ def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
 
-    n = len_ref[0, 0]                                # valid kv count (<= L)
-    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (g, bk), 1)
+    kpos = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+        jnp.int32, (g, bk), 1)
     mask = CL.kv_mask(n - 1, kpos, n, window)        # decode row sits at n-1
 
     p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
@@ -74,21 +105,81 @@ def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
         preferred_element_type=jnp.float32)
 
 
+def _folded_kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref,
+                   *, scale: float, window: int, softcap: float, bk: int,
+                   g: int, merged: bool, bf: int):
+    """The fill-bounded contiguous kernel: ``bf`` slots per block, so the
+    per-program overhead is paid once per (slot-group, head, shard) instead
+    of once per (slot, head, shard). The batched dots are bit-identical to
+    ``bf`` per-slot dots; dead lanes inside a live group are masked to the
+    exact zeros the capacity sweep computed for them."""
+    ik = pl.program_id(2)
+    n = jnp.stack([len_ref[i, 0] for i in range(bf)])    # (bf,) SMEM scalars
+
+    def compute():
+        q = q_ref[:, 0]                              # (bf, g, d)
+        k = k_ref[:, :, 0].astype(q.dtype)           # (bf, bk, d)
+        v = v_ref[:, :, 0].astype(q.dtype)
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bf, g, bk), 2)
+        nb = n[:, None, None]
+        mask = CL.kv_mask(nb - 1, kpos, nb, window)  # decode row sits at n-1
+
+        p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                               merged)
+        p = jnp.where(mask, p, 0.0)
+
+        o_ref[:, 0, 0] = jax.lax.dot_general(        # (bf, g, d) partials
+            p.astype(v.dtype), v, (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+
+    # fill bounding: a shard past every folded slot's fill (or entirely
+    # behind every window) would compute only masked-to-zero weights —
+    # write the zeros directly. The decode row sits at n - 1 per slot.
+    live = jnp.any(CL.shard_live(ik * bk, bk, n, qpos_lo=n - 1,
+                                 window=window))
+    pl.when(live)(compute)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        o_ref[:, 0, 0] = jnp.zeros((bf, g, o_ref.shape[-1]), jnp.float32)
+
+
+def _fold_factor(b: int, bk: int, d: int, limit_bytes: int = 2 << 20) -> int:
+    """Slots folded per bounded-decode block: the largest divisor of ``b``
+    whose K/V blocks stay under ``limit_bytes`` each (fp32), capped at 8."""
+    cap = max(1, limit_bytes // (bk * d * 4))
+    return max(f for f in range(1, min(b, 8, cap) + 1) if b % f == 0)
+
+
 def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
                    softcap: float = 0.0, merged: bool = True,
                    scale: float | None = None, bk: int = 256,
-                   interpret: bool = False):
+                   fill_bound: bool = True, interpret: bool = False):
     """q: (b, nh, d); k, v: (b, L, hkv, d) — the model's cache layout,
     consumed as-is; lengths: (b,) int32 valid counts; beta/gamma: (nh,)
     fp32. Returns (b, nh, d) in q.dtype.
 
     Grid (b, hkv, n_shards) — ALL dims parallel. Shard partials are summed
     in fp32 by the caller-side reduction below (a pure addition; the absence
-    of a softmax combine step is the point). The shard size is the largest
-    divisor of L <= ``bk``, so serving shapes are never padded (padding,
-    like the old (b, hkv, L, d) transpose, would copy the full cache every
-    step); only a degenerate-divisor L (prime-ish standalone shapes) falls
-    back to one padded copy — see ``cache_layout.block_cache_rows``.
+    of a softmax combine step is the point). With ``fill_bound`` (default)
+    the shard axis is clamped to the traced batch-max live shard count,
+    the batch axis is folded into the block (grid (b/bf, hkv, ns_live) —
+    per-program overhead amortized across ``bf`` slots), and dead
+    (slot-group, shard) programs are ``pl.when``-skipped — KV work tracks
+    *fill*, not cache capacity, bit-identically (dead shards contribute
+    exact zeros either way). ``fill_bound=False`` sweeps the full
+    per-slot capacity grid (the pre-fill-bounding behaviour, kept as the
+    benchmark baseline).
+    The shard size is the largest divisor of L <= ``bk``, so serving shapes
+    are never padded (padding, like the old (b, hkv, L, d) transpose, would
+    copy the full cache every step); only a degenerate-divisor L (prime-ish
+    standalone shapes) falls back to one padded copy — see
+    ``cache_layout.block_cache_rows``.
     """
     b, nh, d = q.shape
     hkv = k.shape[2]
@@ -100,65 +191,114 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
     qg = q.reshape(b, hkv, g, d)
     beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv)
     len2 = lengths.reshape(b, 1).astype(jnp.int32)
+    # the grid clamp: a traced VALUE, never a shape — the partials buffer
+    # stays capacity-sized but its slots >= ns_live are never written (and
+    # never read by the fill-bounded combine below)
+    ns_live = CL.live_blocks(jnp.max(lengths), bk, ns) if fill_bound else ns
 
-    kernel = functools.partial(_kernel, scale=scale, window=window,
-                               softcap=softcap, bk=bk, g=g, merged=merged)
+    if fill_bound:
+        bf = _fold_factor(b, bk, d)
+        kernel = functools.partial(_folded_kernel, scale=scale, window=window,
+                                   softcap=softcap, bk=bk, g=g, merged=merged,
+                                   bf=bf)
+        partials = pl.pallas_call(
+            kernel,
+            grid=(b // bf, hkv, ns_live),
+            in_specs=[
+                pl.BlockSpec((bf, 1), lambda ig, ih, ik: (ig, 0),
+                             memory_space=pltpu.SMEM),              # lengths
+                pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # beta
+                pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # gamma
+                pl.BlockSpec((bf, 1, g, d),
+                             lambda ig, ih, ik: (ig, ih, 0, 0)),
+                pl.BlockSpec((bf, bk, 1, d),
+                             lambda ig, ih, ik: (ig, ik, ih, 0)),
+                pl.BlockSpec((bf, bk, 1, d),
+                             lambda ig, ih, ik: (ig, ik, ih, 0)),
+            ],
+            out_specs=pl.BlockSpec((bf, 1, 1, g, d),
+                                   lambda ig, ih, ik: (ig, ih, ik, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+            interpret=interpret,
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "parallel")),
+        )(len2, beta2, gamma2, qg, k, v)
+    else:
+        kernel = functools.partial(_kernel, scale=scale, window=window,
+                                   softcap=softcap, bk=bk, g=g, merged=merged)
+        partials = pl.pallas_call(
+            kernel,
+            grid=(b, hkv, ns),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
+                             memory_space=pltpu.SMEM),              # lengths
+                pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # beta
+                pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # gamma
+                pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda ib, ih, ik: (ib, ik, ih, 0)),
+                pl.BlockSpec((1, bk, 1, d),
+                             lambda ib, ih, ik: (ib, ik, ih, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, g, d),
+                                   lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
+            interpret=interpret,
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "parallel")),
+        )(len2, beta2, gamma2, qg, k, v)
 
-    partials = pl.pallas_call(
-        kernel,
-        grid=(b, hkv, ns),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
-                         memory_space=pltpu.SMEM),                  # lengths
-            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # beta
-            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),       # gamma
-            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda ib, ih, ik: (ib, ik, ih, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, 1, g, d),
-                               lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
-        interpret=interpret,
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "parallel", "parallel")),
-    )(len2, beta2, gamma2, qg, k, v)
-
-    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    out = CL.fill_bounded_sum(partials, ns_live)     # the sync-free combine
     return out.reshape(b, nh, d).astype(q.dtype)
 
 
 # ------------------------------------------------------------- paged KV ----
 def _paged_kernel(tab_ref, len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
                   o_ref, *, scale: float, window: int, softcap: float,
-                  ps: int, g: int, merged: bool):
+                  ps: int, g: int, merged: bool, bounded: bool):
     ib, ij = pl.program_id(0), pl.program_id(2)
-
-    q = q_ref[0, 0]                                  # (g, d)
-    k = k_ref[0, :, 0].astype(q.dtype)               # (ps, d) — one page
-    v = v_ref[0, :, 0].astype(q.dtype)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if softcap > 0:
-        s = softcap * jnp.tanh(s / softcap)
-
     n = len_ref[ib]                                  # valid logical rows
-    kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
-    mask = CL.kv_mask(n - 1, kpos, n, window)        # unmapped page => all
-                                                     # kpos >= n => zeroed
-    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
-                           merged)
-    p = jnp.where(mask, p, 0.0)
 
-    o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    def compute():
+        q = q_ref[0, 0]                              # (g, d)
+        k = k_ref[0, :, 0].astype(q.dtype)           # (ps, d) — one page
+        v = v_ref[0, :, 0].astype(q.dtype)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
+        mask = CL.kv_mask(n - 1, kpos, n, window)    # unmapped page => all
+                                                     # kpos >= n => zeroed
+        p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
+                               merged)
+        p = jnp.where(mask, p, 0.0)
+
+        o_ref[0, 0, 0] = jax.lax.dot_general(        # independent partial
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if not bounded:
+        compute()
+        return
+
+    # fill bounding: an unmapped table entry, a page past this slot's fill,
+    # or one entirely behind its window stops DMA-multiplying zeros out of
+    # clamped page 0 — its partial is written as exact zeros instead
+    live = (tab_ref[ib, ij] >= 0) & CL.shard_live(
+        ij * ps, ps, n, qpos_lo=n - 1, window=window)
+    pl.when(live)(compute)
+
+    @pl.when(jnp.logical_not(live))
+    def _skip():
+        o_ref[0, 0, 0] = jnp.zeros((g, o_ref.shape[-1]), jnp.float32)
 
 
 def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
                          window: int = 0, softcap: float = 0.0,
                          merged: bool = True, scale: float | None = None,
-                         interpret: bool = False):
+                         fill_bound: bool = True, interpret: bool = False):
     """Paged split-KV ConSmax decode. q: (b, nh, d); kp, vp: shared page
     pools (P, ps, nkv, d); page_table: (b, max_pages) int32 (-1 = unmapped);
     lengths: (b,) valid logical rows; beta/gamma: (nh,) fp32.
@@ -169,8 +309,13 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
     BlockSpec index map, no materialized per-slot contiguous cache. Every
     grid dim stays ``parallel``: page partials are independent (no running
     max, no denominator) and combine by the same caller-side fp32 addition
-    as the contiguous kernel. Unmapped entries clamp to page 0 and are
-    fully masked via ``lengths``, so they contribute exact zeros.
+    as the contiguous kernel. With ``fill_bound`` (default) the page axis
+    is clamped to the traced batch-max live page count and per-slot dead
+    pages (unmapped entries, pages past the fill, pages behind the window)
+    are ``pl.when``-skipped, so the table's capacity-sized tail stops
+    costing a program per entry; ``fill_bound=False`` sweeps every table
+    column (the pre-fill-bounding baseline). Unmapped entries clamp to
+    page 0 and contribute exact zeros either way.
     """
     b, nh, d = q.shape
     P, ps, nkv = kp.shape[0], kp.shape[1], kp.shape[2]
@@ -183,16 +328,19 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
     beta2, gamma2 = CL.tile_head_params(beta, gamma, nkv)
     tab = page_table.astype(jnp.int32)
     len1 = lengths.astype(jnp.int32)
+    npg_live = (CL.live_blocks(jnp.max(len1), ps, npg) if fill_bound
+                else npg)
 
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               softcap=softcap, ps=ps, g=g, merged=merged)
+                               softcap=softcap, ps=ps, g=g, merged=merged,
+                               bounded=fill_bound)
 
     def page_map(ib, ih, ij, tab_ref, len_ref):
         return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                       # page table + lengths
-        grid=(b, nkv, npg),
+        grid=(b, nkv, npg_live),
         in_specs=[
             pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # beta
             pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # gamma
@@ -213,5 +361,5 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
             dimension_semantics=("parallel", "parallel", "parallel")),
     )(tab, len1, beta2, gamma2, qg, kp, vp)
 
-    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    out = CL.fill_bounded_sum(partials, npg_live)    # the sync-free combine
     return out.reshape(b, nh, d).astype(q.dtype)

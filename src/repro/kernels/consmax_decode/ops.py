@@ -23,38 +23,45 @@ def _on_cpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
-                                   "bk", "interpret"))
+                                   "bk", "fill_bound", "interpret"))
 def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
-                      merged=True, scale=None, bk=256, interpret=None):
+                      merged=True, scale=None, bk=256, fill_bound=True,
+                      interpret=None):
     """q: (b, 1, H, dk); k, v: (b, L, hkv, dk) — the cache, consumed in its
     stored layout (the kernel blocks the hkv axis, so no per-step transpose
     copy); index: (b,) current position.
 
     Returns (b, 1, H, dk) in q.dtype. ``scale=1.0`` when q is pre-scaled
     (the model path); None applies 1/sqrt(dk) (the standalone convention).
+    ``fill_bound`` (default True) bounds KV grid work by the traced fill
+    level instead of cache capacity — ``index`` stays a value, so the
+    compiled step is shared across every fill level.
     """
     interp = _on_cpu() if interpret is None else interpret
     out = consmax_decode(q[:, 0], k, v, index + 1, beta, gamma,
                          window=window, softcap=softcap, merged=merged,
-                         scale=scale, bk=bk, interpret=interp)
+                         scale=scale, bk=bk, fill_bound=fill_bound,
+                         interpret=interp)
     return out[:, None]
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
-                                   "interpret"))
+                                   "fill_bound", "interpret"))
 def consmax_decode_paged_op(q, kp, vp, page_table, lengths, beta, gamma, *,
                             window=0, softcap=0.0, merged=True, scale=None,
-                            interpret=None):
+                            fill_bound=True, interpret=None):
     """Paged-pool variant. q: (b, 1, H, dk); kp, vp: shared page pools
     (P, ps, hkv, dk) in the model's cache layout (no transpose — the kernel
     blocks the hkv axis directly, so the pool is never copied per step);
     page_table: (b, max_pages) int32; lengths: (b,) valid logical rows
     (index + active, already counting the token written this step).
 
-    Returns (b, 1, H, dk) in q.dtype.
+    Returns (b, 1, H, dk) in q.dtype. ``fill_bound`` bounds the page-table
+    walk by the traced batch-max fill instead of the table's capacity.
     """
     interp = _on_cpu() if interpret is None else interpret
     out = consmax_decode_paged(q[:, 0], kp, vp, page_table, lengths, beta,
                                gamma, window=window, softcap=softcap,
-                               merged=merged, scale=scale, interpret=interp)
+                               merged=merged, scale=scale,
+                               fill_bound=fill_bound, interpret=interp)
     return out[:, None]

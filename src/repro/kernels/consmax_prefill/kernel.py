@@ -43,6 +43,20 @@ thousands of copies, defeating the page pool's memory saving. The
 accumulation is still a bare ``acc += p @ v``: ConSmax removes the (m, l)
 rescale that softmax would thread between pages, which is what keeps the
 fused page walk this simple.
+
+Fill bounding (``fill_bound=True``, the default): serving caches are sized
+at capacity but a prefill chunk only ever reads rows below the batch-max
+``index + lengths``, so the KV-shard / page grid axis is clamped to the
+traced live shard count (``cache_layout.live_blocks`` — fill stays a
+*value*, the compiled shape never changes) and each surviving program
+additionally ``pl.when``-skips its compute when its shard lies beyond the
+slot's own fill or the chunk's causal/window reach
+(``cache_layout.shard_live``). A skipped contiguous shard writes exact
+zeros to its partial slot; a skipped page simply doesn't accumulate. Both
+are pure zero-writes because ConSmax partials combine by addition — a
+skipped shard owes no rescale and no denominator term — so the bounded and
+capacity-swept paths are bit-identical. ``fill_bound=False`` keeps the
+capacity-swept grid (the pre-bounding behavior) for A/B benchmarking.
 """
 from __future__ import annotations
 
@@ -64,37 +78,51 @@ MAX_KV_SHARDS = 64
 
 def _kernel(idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
             o_ref, *, scale: float, window: int, softcap: float, bqg: int,
-            bk: int, g: int, merged: bool):
+            bk: int, bq: int, g: int, merged: bool, bounded: bool):
     iq, ik = pl.program_id(2), pl.program_id(3)
-
-    q = q_ref[0, 0]                                  # (bqg, d)
-    k = k_ref[0, :, 0].astype(q.dtype)               # (bk, d) — cache layout
-    v = v_ref[0, :, 0].astype(q.dtype)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if softcap > 0:
-        s = softcap * jnp.tanh(s / softcap)
-
     idx = idx_ref[0, 0]                              # chunk start position
     kvl = kvl_ref[0, 0]                              # index + real length
-    row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 0)
-    qpos = idx + row // g                            # position-major rows
-    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 1)
-    mask = CL.kv_mask(qpos, kpos, kvl, window)
 
-    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
-                           merged)
-    p = jnp.where(mask, p, 0.0)
+    def compute():
+        q = q_ref[0, 0]                              # (bqg, d)
+        k = k_ref[0, :, 0].astype(q.dtype)           # (bk, d) — cache layout
+        v = v_ref[0, :, 0].astype(q.dtype)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
 
-    o_ref[0, 0, 0] = jax.lax.dot_general(            # independent partial
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 0)
+        qpos = idx + row // g                        # position-major rows
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bqg, bk), 1)
+        mask = CL.kv_mask(qpos, kpos, kvl, window)
+
+        p = CL.consmax_weights(s, beta_ref[0][:, None],
+                               gamma_ref[0][:, None], merged)
+        p = jnp.where(mask, p, 0.0)
+
+        o_ref[0, 0, 0] = jax.lax.dot_general(        # independent partial
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if not bounded:
+        compute()
+        return
+    live = CL.shard_live(ik * bk, bk, kvl,           # this slot's fill and
+                         qpos_hi=idx + iq * bq + bq - 1,  # the q-block's
+                         qpos_lo=idx + iq * bq,      # causal/window reach
+                         window=window)
+    pl.when(live)(compute)
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():                                     # exact-zero partial
+        o_ref[0, 0, 0] = jnp.zeros((bqg, o_ref.shape[-1]), jnp.float32)
 
 
 def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
                     softcap: float = 0.0, merged: bool = True,
                     scale: float | None = None, bq: int = 128, bk: int = 512,
-                    interpret: bool = False):
+                    fill_bound: bool = True, interpret: bool = False):
     """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
     k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
     ``index`` (consumed as stored — no transpose); index, lengths: (b,)
@@ -112,6 +140,11 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
     shard — the parallel split buys its independence with ``ns``
     chunk-output-sized fp32 partial buffers, and an uncapped ns at 500k
     context would cost ~1000x the chunk output in HBM.
+
+    ``fill_bound=True`` clamps the shard axis to the traced batch-max live
+    shard count and skips per-program work beyond each slot's own fill or
+    the q-block's causal/window reach (see module docstring) — bit-identical
+    to the capacity sweep, fill stays a value.
     """
     b, c, H, dk = q.shape
     L, hkv = k.shape[1], k.shape[2]
@@ -129,13 +162,15 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
     idx2 = index.reshape(b, 1).astype(jnp.int32)
     kvl2 = (index + lengths).reshape(b, 1).astype(jnp.int32)
 
+    ns_live = CL.live_blocks(jnp.max(kvl2), bk, ns) if fill_bound else ns
+
     kernel = functools.partial(_kernel, scale=scale, window=window,
-                               softcap=softcap, bqg=bqg, bk=bk, g=g,
-                               merged=merged)
+                               softcap=softcap, bqg=bqg, bk=bk, bq=bq, g=g,
+                               merged=merged, bounded=fill_bound)
 
     partials = pl.pallas_call(
         kernel,
-        grid=(b, hkv, nq, ns),
+        grid=(b, hkv, nq, ns_live),
         in_specs=[
             pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
                          memory_space=pltpu.SMEM),                  # index
@@ -159,43 +194,53 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
                                  "parallel")),
     )(idx2, kvl2, beta2, gamma2, qf, k, v)
 
-    out = jnp.sum(partials, axis=2)                  # the sync-free combine
+    out = CL.fill_bounded_sum(partials, ns_live)     # the sync-free combine
     return CL.unfold_gqa(out, b, c, H).astype(q.dtype)
 
 
 # ------------------------------------------------------------- paged KV ----
 def _paged_kernel(tab_ref, idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref,
                   k_ref, v_ref, o_ref, acc_ref, *, scale: float, window: int,
-                  softcap: float, bqg: int, ps: int, g: int, merged: bool):
+                  softcap: float, bqg: int, ps: int, bq: int, g: int,
+                  merged: bool, bounded: bool):
     ib, iq, ij = pl.program_id(0), pl.program_id(2), pl.program_id(3)
     nj = pl.num_programs(3)
+    idx = idx_ref[ib]
+    kvl = kvl_ref[ib]
 
     @pl.when(ij == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0]                                  # (bqg, d)
-    k = k_ref[0, :, 0].astype(q.dtype)               # (ps, d) — one page
-    v = v_ref[0, :, 0].astype(q.dtype)
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    if softcap > 0:
-        s = softcap * jnp.tanh(s / softcap)
+    def accumulate():
+        q = q_ref[0, 0]                              # (bqg, d)
+        k = k_ref[0, :, 0].astype(q.dtype)           # (ps, d) — one page
+        v = v_ref[0, :, 0].astype(q.dtype)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
 
-    idx = idx_ref[ib]
-    kvl = kvl_ref[ib]
-    row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 0)
-    qpos = idx + row // g
-    kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 1)
-    mask = CL.kv_mask(qpos, kpos, kvl, window)       # unmapped page => all
+        row = iq * bqg + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 0)
+        qpos = idx + row // g
+        kpos = ij * ps + jax.lax.broadcasted_iota(jnp.int32, (bqg, ps), 1)
+        mask = CL.kv_mask(qpos, kpos, kvl, window)   # unmapped page => all
                                                      # kpos >= kvl => zeroed
-    p = CL.consmax_weights(s, beta_ref[0][:, None], gamma_ref[0][:, None],
-                           merged)
-    p = jnp.where(mask, p, 0.0)
+        p = CL.consmax_weights(s, beta_ref[0][:, None],
+                               gamma_ref[0][:, None], merged)
+        p = jnp.where(mask, p, 0.0)
 
-    acc_ref[...] += jax.lax.dot_general(             # bare add — no rescale
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        acc_ref[...] += jax.lax.dot_general(         # bare add — no rescale
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if bounded:
+        live = (tab_ref[ib, ij] >= 0) & CL.shard_live(
+            ij * ps, ps, kvl, qpos_hi=idx + iq * bq + bq - 1,
+            qpos_lo=idx + iq * bq, window=window)
+        pl.when(live)(accumulate)                    # dead page: no add —
+    else:                                            # init/flush still run
+        accumulate()
 
     @pl.when(ij == nj - 1)
     def _flush():
@@ -205,7 +250,8 @@ def _paged_kernel(tab_ref, idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref,
 def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
                           gamma, *, window: int = 0, softcap: float = 0.0,
                           merged: bool = True, scale: float | None = None,
-                          bq: int = 128, interpret: bool = False):
+                          bq: int = 128, fill_bound: bool = True,
+                          interpret: bool = False):
     """Paged fused prefill. q: (b, c, H, dk) chunk queries; kp, vp: shared
     page pools (P, ps, hkv, dk) *after* the chunk's K/V were scattered in;
     page_table: (b, max_pages) int32 (-1 = unmapped); index, lengths: (b,)
@@ -218,6 +264,13 @@ def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
     ride in as scalar-prefetch operands, so the gather lives in the
     BlockSpec index map: unmapped entries clamp to page 0 and every row
     they could contribute is masked via ``kv_len``.
+
+    ``fill_bound=True`` clamps the page axis to the traced batch-max live
+    page count and skips the accumulate of any unmapped page
+    (``page_table[ib, ij] < 0``) or page beyond the slot's fill /
+    causal/window reach — the per-q-block init and final flush still run,
+    so a fully-dead walk flushes exact zeros. Bit-identical to the
+    capacity sweep.
     """
     b, c, H, dk = q.shape
     P, ps, hkv = kp.shape[0], kp.shape[1], kp.shape[2]
@@ -235,16 +288,18 @@ def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
     idx1 = index.astype(jnp.int32)
     kvl1 = (index + lengths).astype(jnp.int32)
 
+    npg_live = CL.live_blocks(jnp.max(kvl1), ps, npg) if fill_bound else npg
+
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               softcap=softcap, bqg=bqg, ps=ps, g=g,
-                               merged=merged)
+                               softcap=softcap, bqg=bqg, ps=ps, bq=bq, g=g,
+                               merged=merged, bounded=fill_bound)
 
     def page_map(ib, ih, iq, ij, tab_ref, idx_ref, kvl_ref):
         return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                       # table, index, kv_len
-        grid=(b, hkv, nq, npg),
+        grid=(b, hkv, nq, npg_live),
         in_specs=[
             pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
             pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),

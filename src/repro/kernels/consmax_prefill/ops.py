@@ -22,36 +22,41 @@ def _on_cpu() -> bool:
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
-                                   "bq", "bk", "interpret"))
+                                   "bq", "bk", "fill_bound", "interpret"))
 def consmax_prefill_op(q, k, v, index, lengths, beta, gamma, *, window=0,
                        softcap=0.0, merged=True, scale=None, bq=128, bk=512,
-                       interpret=None):
+                       fill_bound=True, interpret=None):
     """q: (b, c, H, dk) chunk at per-slot cache positions index + [0, c);
     k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written;
     index, lengths: (b,) int32. Returns (b, c, H, dk) in q.dtype; rows
     >= lengths are pad rows whose output the caller discards.
 
     ``scale=1.0`` when q is pre-scaled (the model path); None applies
-    1/sqrt(dk) (the standalone convention).
+    1/sqrt(dk) (the standalone convention). ``fill_bound`` (default True)
+    bounds KV-shard grid work by the traced fill level instead of cache
+    capacity — fill stays a value, one compiled chunk step for all fills.
     """
     interp = _on_cpu() if interpret is None else interpret
     return consmax_prefill(q, k, v, index, lengths, beta, gamma,
                            window=window, softcap=softcap, merged=merged,
-                           scale=scale, bq=bq, bk=bk, interpret=interp)
+                           scale=scale, bq=bq, bk=bk, fill_bound=fill_bound,
+                           interpret=interp)
 
 
 @partial(jax.jit, static_argnames=("window", "softcap", "merged", "scale",
-                                   "bq", "interpret"))
+                                   "bq", "fill_bound", "interpret"))
 def consmax_prefill_paged_op(q, kp, vp, page_table, index, lengths, beta,
                              gamma, *, window=0, softcap=0.0, merged=True,
-                             scale=None, bq=128, interpret=None):
+                             scale=None, bq=128, fill_bound=True,
+                             interpret=None):
     """Paged-pool variant. kp, vp: shared (P, ps, hkv, dk) pools in the
     model's cache layout (never copied — the kernel walks page-table
     entries via scalar prefetch); page_table: (b, max_pages) int32.
-    Returns (b, c, H, dk) in q.dtype.
+    Returns (b, c, H, dk) in q.dtype. ``fill_bound`` bounds the page walk
+    by the traced batch-max fill instead of the table's capacity.
     """
     interp = _on_cpu() if interpret is None else interpret
     return consmax_prefill_paged(q, kp, vp, page_table, index, lengths,
                                  beta, gamma, window=window, softcap=softcap,
                                  merged=merged, scale=scale, bq=bq,
-                                 interpret=interp)
+                                 fill_bound=fill_bound, interpret=interp)

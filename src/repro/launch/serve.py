@@ -72,6 +72,9 @@ def main():
                          "archs only; errors otherwise)")
     ap.add_argument("--prefill-kv-block", type=int, default=512,
                     help="KV shard size for the prefill kernel grid")
+    ap.add_argument("--no-fill-bound", action="store_true",
+                    help="disable fill-bounded kernel grids (capacity-swept "
+                         "KV walks — the pre-bounding A/B baseline)")
     ap.add_argument("--paged", action="store_true",
                     help="shared page-pool KV cache (continuous engine "
                          "only): slots map rows onto pool pages instead of "
@@ -111,6 +114,7 @@ def main():
                              decode_kernel=args.decode_kernel,
                              prefill_kernel=args.prefill_kernel,
                              prefill_kv_block=args.prefill_kv_block,
+                             fill_bound=not args.no_fill_bound,
                              fused_sampling=fused,
                              score_norm=cfg.score_norm), params)
         prompts = random.randint(random.key(1),
@@ -134,6 +138,7 @@ def main():
                        decode_kernel=args.decode_kernel,
                        prefill_kernel=args.prefill_kernel,
                        prefill_kv_block=args.prefill_kv_block,
+                       fill_bound=not args.no_fill_bound,
                        fused_sampling=fused,
                        score_norm=cfg.score_norm,
                        paged_kv=args.paged, page_size=args.page_size,

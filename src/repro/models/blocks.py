@@ -122,7 +122,7 @@ def block_init(ctx, name, cfg: ModelConfig, kind: str):
 def block_apply(p, x, cfg: ModelConfig, kind: str, *, positions=None,
                 cache=None, cond=None, merged=False, q_chunk=2048,
                 kv_chunk=1024, decode_kernel=False, decode_kv_block=256,
-                prefill_kernel=False, prefill_kv_block=512,
+                prefill_kernel=False, prefill_kv_block=512, fill_bound=True,
                 prefill_append=None, decode_active=None, page_table=None):
     """Returns (x, new_cache, aux_losses)."""
     aux = jnp.zeros((), jnp.float32)
@@ -137,7 +137,8 @@ def block_apply(p, x, cfg: ModelConfig, kind: str, *, positions=None,
             cache=attn_cache, merged=merged, q_chunk=q_chunk,
             kv_chunk=kv_chunk, decode_kernel=decode_kernel,
             decode_kv_block=decode_kv_block, prefill_kernel=prefill_kernel,
-            prefill_kv_block=prefill_kv_block, prefill_append=prefill_append,
+            prefill_kv_block=prefill_kv_block, fill_bound=fill_bound,
+            prefill_append=prefill_append,
             decode_active=decode_active, page_table=page_table)
         if cfg.post_block_norm:
             h = L.norm_apply(p["attn_post_norm"], h, kind=cfg.norm)

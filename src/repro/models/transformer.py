@@ -46,7 +46,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              caches=None, positions=None, merged=False, remat="full",
              q_chunk=2048, kv_chunk=1024, logits_slice=None,
              logits_index=None, decode_kernel=False, decode_kv_block=256,
-             prefill_kernel=False, prefill_kv_block=512,
+             prefill_kernel=False, prefill_kv_block=512, fill_bound=True,
              prefill_append=None, decode_active=None, page_table=None,
              logits_epilogue=None):
     """Forward pass.
@@ -60,6 +60,9 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
     decode_kernel: one-token consmax decode via the split-KV Pallas kernel.
     prefill_kernel: chunked consmax append prefill via the fused Pallas
     kernel (kernels/consmax_prefill) instead of the jnp KV walk.
+    fill_bound: bound the serving kernels' KV grids by the traced fill
+    (cache ``index``) instead of cache capacity; fill stays a value, so
+    no extra compiled shape. False = capacity-swept A/B baseline.
     prefill_append: (b,) int32 real chunk lengths — chunked append-at-index
     prefill: tokens is a fixed-size chunk written into each attention cache
     at its per-slot ``index`` (which then advances by the real length).
@@ -98,7 +101,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
                 cond=cond, merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk,
                 decode_kernel=decode_kernel, decode_kv_block=decode_kv_block,
                 prefill_kernel=prefill_kernel,
-                prefill_kv_block=prefill_kv_block,
+                prefill_kv_block=prefill_kv_block, fill_bound=fill_bound,
                 prefill_append=prefill_append, decode_active=decode_active,
                 page_table=page_table)
             aux = aux + a

@@ -149,6 +149,7 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             prefill_append=lengths, logits_index=lengths - 1,
             prefill_kernel=scfg.prefill_kernel,
             prefill_kv_block=scfg.prefill_kv_block,
+            fill_bound=scfg.fill_bound,
             logits_epilogue=_epilogue(sampling) if fused else None,
             q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
         return (out if fused else out[:, 0]), caches
@@ -170,6 +171,7 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             params, cfg, caches=caches, merged=True, positions=positions,
             decode_kernel=scfg.decode_kernel,
             decode_kv_block=scfg.decode_kv_block,
+            fill_bound=scfg.fill_bound,
             decode_active=batch_inputs.get("active"),
             page_table=batch_inputs.get("page_table"),
             logits_epilogue=_epilogue(sampling) if fused else None, **kw)
@@ -231,6 +233,11 @@ class ServeSession:
         lengths: optional (b,) real prompt lengths for a right-padded ragged
         batch — prefill masks pad rows and each row decodes from its own
         position, so row r's output equals serving prompt r alone."""
+        if steps < 1:
+            raise ValueError(
+                f"generate: steps must be >= 1, got {steps} — the prefill "
+                "step always samples one token, so steps=0 cannot mean "
+                "'no tokens'")
         b, s = prompts.shape
         if sampling is None:
             sampling = SamplingParams(temperature=float(temperature),
@@ -422,6 +429,7 @@ class ContinuousBatchingEngine:
                 prefill_append=lengths, logits_index=lengths[0] - 1,
                 prefill_kernel=scfg.prefill_kernel,
                 prefill_kv_block=scfg.prefill_kv_block,
+                fill_bound=scfg.fill_bound,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
                 page_table=page_row, logits_epilogue=epi)
             def put(path, big, one):
@@ -510,6 +518,15 @@ class ContinuousBatchingEngine:
     def page_occupancy(self) -> float:
         """Fraction of pool pages currently mapped (paged engines only)."""
         return self.pool.occupancy() if self.pool is not None else 0.0
+
+    @property
+    def page_reserved(self) -> float:
+        """Fraction of pool pages committed by live reservations — includes
+        reserved-but-unmapped pages that ``page_occupancy`` cannot see, so
+        ``page_reserved - page_occupancy`` is the invisible admission
+        pressure stalling the queue (paged engines only)."""
+        return (self.pool.reserved_fraction() if self.pool is not None
+                else 0.0)
 
     # ---------------------------------------------------------- internals ----
     def _device_table(self):

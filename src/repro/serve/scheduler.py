@@ -68,6 +68,7 @@ class PagePool:
         self._held = [0] * max_slots       # pages currently mapped per slot
         self._reserved = [0] * max_slots   # worst-case pages per slot
         self.peak_in_use = 0
+        self.peak_reserved = 0
         self.version = 0                   # bumped on every table mutation —
                                            # lets the engine keep a device
                                            # copy and re-upload only on change
@@ -81,8 +82,20 @@ class PagePool:
     def in_use(self) -> int:
         return self.num_pages - len(self._free)
 
+    @property
+    def reserved_pages(self) -> int:
+        """Worst-case pages committed across all live reservations —
+        including reserved-but-unmapped pages, which ``in_use`` /
+        ``occupancy()`` cannot see (a slot that reserved and never
+        ``ensure``d holds zero pool pages yet still gates admission).
+        ``reserved_pages - in_use`` is the invisible admission pressure."""
+        return sum(self._reserved)
+
     def occupancy(self) -> float:
         return self.in_use / self.num_pages
+
+    def reserved_fraction(self) -> float:
+        return self.reserved_pages / self.num_pages
 
     def pages_for(self, rows: int) -> int:
         return -(-rows // self.page_size)
@@ -104,6 +117,7 @@ class PagePool:
         if sum(self._reserved) + need > self.num_pages:
             return False
         self._reserved[slot] = need
+        self.peak_reserved = max(self.peak_reserved, self.reserved_pages)
         return True
 
     def ensure(self, slot: int, rows: int) -> list[int]:
@@ -235,13 +249,15 @@ class Scheduler:
         At most one chunk (``n <= chunk`` tokens) per PREFILLING slot, total
         real tokens capped by ``budget`` — except that the first planned
         chunk always runs, so a budget below the chunk size cannot starve
-        prefill forever."""
+        prefill forever. The cap is checked *before* a chunk is planned:
+        a chunk that would push the total past ``budget`` waits for the
+        next iteration rather than overshooting by up to ``chunk - 1``."""
         plan: list[tuple[int, int, int]] = []
         used = 0
         for i, s in self.prefilling():
-            if plan and used >= budget:
-                break
             n = min(chunk, len(s.request.prompt) - s.filled)
+            if plan and used + n > budget:
+                break
             plan.append((i, s.filled, n))
             used += n
         return plan

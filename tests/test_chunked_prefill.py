@@ -184,9 +184,12 @@ def test_scheduler_prefill_budget_caps_tokens_per_iteration():
         s.submit([1] * 10, 2)
     while s.admit() is not None:
         pass
-    # budget 6 with chunk 4: slot 0 (4 toks) + slot 1 (4, crosses the cap),
-    # slot 2 deferred to the next iteration
-    assert s.prefill_plan(4, 6) == [(0, 0, 4), (1, 0, 4)]
+    # budget 6 with chunk 4: slot 0 (4 toks) fits; slot 1's chunk would
+    # overshoot to 8 > 6, so it (and slot 2) wait for the next iteration —
+    # the cap is a real cap, never exceeded past the first chunk
+    assert s.prefill_plan(4, 6) == [(0, 0, 4)]
+    # an exact-fit budget takes both chunks
+    assert s.prefill_plan(4, 8) == [(0, 0, 4), (1, 0, 4)]
     # a budget below one chunk still makes progress (never starves)
     assert s.prefill_plan(4, 1) == [(0, 0, 4)]
     # one chunk per slot per iteration, even with budget to spare
