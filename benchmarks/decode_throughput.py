@@ -55,6 +55,7 @@ from jax import random
 from jax.tree_util import tree_map_with_path
 
 from benchmarks.common import bench_wall, emit
+from repro.analysis.trace_guard import TraceGuard
 from repro.configs.base import SHAPES, ServeConfig
 from repro.configs.registry import get_config
 from repro.models import transformer as T
@@ -107,6 +108,11 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
                        decode_kernel=decode_kernel, paged_kv=paged,
                        page_size=8 if paged else 256, fused_sampling=fused)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
+    # the analysis-layer trace guard replaces the old ad-hoc cache_size
+    # asserts: the whole benchmark workload — ragged admissions, decode,
+    # slot recycling — must leave ONE compiled shape per step, or the
+    # throughput rows are measuring compile stalls
+    guard = TraceGuard.for_engine(eng, limit=1)
 
     def serve():
         done = len(eng.results)
@@ -119,6 +125,7 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
     t0 = time.perf_counter()
     useful = serve()
     dt = time.perf_counter() - t0
+    guard.assert_ok()
     occ = (eng.pool.peak_in_use / scfg.num_pages) if paged else 0.0
     # peak committed (reserved) pages: includes reserved-but-unmapped
     # pressure that occupancy can't see — the quantity gating admission

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 
 from repro.configs.base import SHAPES

@@ -5,10 +5,7 @@ data is lost.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import os
 import shutil
-
-import numpy as np
 
 from repro.configs.base import TrainConfig
 from repro.configs.registry import get_config
@@ -26,7 +23,7 @@ def main():
 
     # ---- run A: train 60 steps, checkpointing every 20 ----
     tr = Trainer(cfg, tcfg, ckpt_dir=CKPT, ckpt_every=20, log_every=20)
-    hist_a = tr.run(60)
+    tr.run(60)
     tr.ckpt.wait()
     print(f"[A] stopped at step {tr.step_index()} "
           f"(checkpoints: {tr.ckpt.steps()})")

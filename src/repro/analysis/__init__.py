@@ -1,0 +1,29 @@
+# Serving-path static analysis (jaxpr lint, kernel contracts, trace guard).
+"""Rule-based static analysis for the serving hot path.
+
+The ConSmax serving design earns its speed from properties that are easy to
+silently lose in a refactor: no serving step may transpose / pad / copy a
+cache-sized array (the kernels consume the cache in its stored layout), the
+fused-sampling steps must never emit a vocab-sized output (tokens, not
+logits, cross the host boundary), every kernel grid dimension marked
+``parallel`` must write disjoint output blocks (ConSmax's pure-addition
+combine is what makes all-parallel grids legal at all), and one compiled
+shape must serve the engine's whole lifetime. This package checks those
+properties statically — over jaxprs (``jaxpr_lint``), over Pallas grids and
+BlockSpecs without running the kernels (``kernel_contracts``), and over the
+jit caches of live step functions (``trace_guard``) — so they are enforced
+by one reusable rule set and the ``repro.launch.analyze`` CI gate instead
+of per-test copy-pasted traversals.
+"""
+from repro.analysis.jaxpr_lint import (Finding, StepTarget, cache_sized_ops,
+                                       iter_eqns, run_rules,
+                                       vocab_sized_avals)
+from repro.analysis.kernel_contracts import (KernelLaunch, capture_launches,
+                                             check_launch, serving_launches)
+from repro.analysis.trace_guard import TraceGuard
+
+__all__ = [
+    "Finding", "StepTarget", "cache_sized_ops", "iter_eqns", "run_rules",
+    "vocab_sized_avals", "KernelLaunch", "capture_launches", "check_launch",
+    "serving_launches", "TraceGuard",
+]

@@ -1,0 +1,77 @@
+"""Compilation-count instrument for the serving step functions.
+
+One compiled shape per step is a serving-path contract: the fill-bounded
+grids keep *fill* a traced value precisely so the engine's whole lifetime —
+every fill level, every slot count in flight — reuses one executable per
+step. A retrace means a shape leaked into the step signature (a python int
+fill, a fresh tuple-shaped aux, a capacity-dependent grid) and shows up in
+production as a multi-second compile stall mid-serve.
+
+:class:`TraceGuard` replaces the scattered one-trace regression asserts:
+attach it to any jitted functions (``track``) or to a live
+:class:`~repro.serve.engine.ContinuousBatchingEngine` (``for_engine``),
+drive traffic, then ``assert_ok()`` / collect ``findings()``. Counts are
+deltas from attach time, so guarding an already-warm engine works — the
+guard measures *new* compilations under the traffic you drove, not history.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.analysis.jaxpr_lint import Finding
+
+
+def _cache_size(fn) -> int:
+    return int(fn._cache_size())
+
+
+@dataclass
+class _Tracked:
+    fn: object
+    baseline: int
+    limit: int
+
+
+@dataclass
+class TraceGuard:
+    """Watch jitted step functions for excess retracing.
+
+    ``limit`` is the number of compilations a step is *allowed* after
+    attach: 1 for a cold engine (the first trace is the contract), 0 for a
+    warm one (any new trace is a violation).
+    """
+    _tracked: dict = field(default_factory=dict)
+
+    def track(self, label: str, jitted_fn, limit: int = 1) -> "TraceGuard":
+        self._tracked[label] = _Tracked(jitted_fn, _cache_size(jitted_fn),
+                                        limit)
+        return self
+
+    @classmethod
+    def for_engine(cls, engine, limit: int = 1) -> "TraceGuard":
+        """Guard a ContinuousBatchingEngine's prefill and decode steps."""
+        guard = cls()
+        guard.track("prefill_step", engine._prefill, limit)
+        guard.track("decode_step", engine._decode, limit)
+        return guard
+
+    def counts(self) -> dict[str, int]:
+        """New compilations per tracked step since attach."""
+        return {label: _cache_size(t.fn) - t.baseline
+                for label, t in self._tracked.items()}
+
+    def findings(self) -> list[Finding]:
+        out = []
+        for label, t in self._tracked.items():
+            new = _cache_size(t.fn) - t.baseline
+            if new > t.limit:
+                out.append(Finding(
+                    "one-trace-per-step", label,
+                    f"{label} compiled {new} times (limit {t.limit}) — a "
+                    "shape leaked into the step signature; fill and slot "
+                    "occupancy must stay traced values", (new, t.limit)))
+        return out
+
+    def assert_ok(self) -> None:
+        bad = self.findings()
+        assert not bad, "; ".join(f.message for f in bad)

@@ -1,5 +1,5 @@
 """Architecture config: grok-1-314b (see registry docstring for sources)."""
-from repro.configs.base import (ConSmaxConfig, MambaConfig, ModelConfig,
-                                MoEConfig, XLSTMConfig)
+from repro.configs.base import (ConSmaxConfig, ModelConfig,
+                                MoEConfig)
 
 CONFIG = ModelConfig(arch_id='grok-1-314b', family='moe', n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_ff=32768, vocab_size=131072, head_dim=0, score_norm='consmax', consmax=ConSmaxConfig(beta_init_lo=0.5, beta_init_hi=2.5, gamma_init=100.0, per_head=True, learnable=True), qkv_bias=False, rope_style='half', rope_fraction=1.0, rope_theta=10000.0, attn_softcap=30.0, final_softcap=30.0, window=0, block_pattern=('attn_moe',), cross_attn=False, n_cond_tokens=0, sinusoidal_pos=False, mlp='gelu_glu', norm='rmsnorm', post_block_norm=False, embed_scale=True, tie_embeddings=True, frontend='tokens', moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=32768, capacity_factor=1.25, layer_period=1, aux_loss_weight=0.01, router_norm='softmax'), mamba=None, xlstm=None, param_dtype='float32', compute_dtype='bfloat16')

@@ -64,7 +64,6 @@ def cp_decode_softmax(q, k, v, index, *, axis_name, softcap=0.0, window=0):
     """The baseline: local (m, l, o) then a global (pmax, psum, psum)."""
     b, _, H, dk = q.shape
     Lloc, hkv = k.shape[1], k.shape[2]
-    g = H // hkv
     i = jax.lax.axis_index(axis_name)
     kpos = i * Lloc + jnp.arange(Lloc)
     msk = kpos[None, :] <= index[:, None]

@@ -6,7 +6,6 @@ probabilities. softmax/softermax reduce over the kv axis; consmax does not.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import consmax as _consmax

@@ -35,12 +35,20 @@ _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
 _BODY_RE = re.compile(r"(condition|body|to_apply|calls)=\{?%?([\w\.\-]+)")
 
 
-def shape_bytes(shape_str: str) -> int:
-    """Sum of array bytes over every shape literal in the string."""
+def shape_bytes(shape_str: str, *, unknown: dict | None = None) -> int:
+    """Sum of array bytes over every shape literal in the string.
+
+    Dtype tokens missing from ``_DTYPE_BYTES`` (new XLA fp8/fp4 spellings,
+    tuple wrappers) contribute zero bytes — they must degrade the estimate,
+    not KeyError a whole analysis run. Pass a dict as ``unknown`` to have
+    occurrences counted per token, so callers can surface
+    counted-but-uncosted collectives instead of silently under-reporting."""
     total = 0
     for m in _SHAPE_RE.finditer(shape_str):
         dt, dims = m.group(1), m.group(2)
         if dt not in _DTYPE_BYTES:
+            if unknown is not None:
+                unknown[dt] = unknown.get(dt, 0) + 1
             continue
         n = 1
         for d in dims.split(","):
@@ -55,18 +63,25 @@ class CollectiveStats:
     bytes_by_kind: dict = field(default_factory=lambda: defaultdict(int))
     count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
     seconds: float = 0.0
+    # dtype tokens seen in collective shapes but missing from _DTYPE_BYTES:
+    # counted but uncosted — the summary carries the warning instead of the
+    # parse raising (or the bytes silently thinning)
+    unknown_dtypes: dict = field(default_factory=lambda: defaultdict(int))
 
     @property
     def total_bytes(self) -> int:
         return sum(self.bytes_by_kind.values())
 
     def summary(self) -> dict:
-        return {
+        out = {
             "bytes_by_kind": dict(self.bytes_by_kind),
             "count_by_kind": dict(self.count_by_kind),
             "total_bytes": self.total_bytes,
             "seconds": self.seconds,
         }
+        if self.unknown_dtypes:
+            out["unknown_dtypes"] = dict(self.unknown_dtypes)
+        return out
 
 
 def _split_computations(hlo: str) -> tuple[dict, str | None]:
@@ -140,7 +155,7 @@ def collective_stats(hlo: str, *, link_bw: float,
                     kind, shape_part = k, m.group(1)
                     break
             if kind is not None:
-                out_b = shape_bytes(shape_part)
+                out_b = shape_bytes(shape_part, unknown=stats.unknown_dtypes)
                 n = _group_size(ln, num_devices)
                 frac = (n - 1) / n if n > 1 else 0.0
                 if kind == "all-reduce":

@@ -1,0 +1,349 @@
+"""Serving-path static-analysis gate: the full rule set over the serve
+config matrix, one machine-readable ``ANALYSIS.json``, non-zero exit on any
+violation.
+
+    PYTHONPATH=src python -m repro.launch.analyze              # the CI gate
+    PYTHONPATH=src python -m repro.launch.analyze --skip-trace-guard  # fast
+    PYTHONPATH=src python -m repro.launch.analyze --self-test  # rules fire?
+
+For every registered serve config — {contiguous, paged} x {fused sampling,
+legacy logits} x {fill-bounded, capacity-swept}, all with both serving
+kernels on — the gate:
+
+* traces the engine's jitted prefill and decode steps to jaxprs (a trace,
+  not a compile — milliseconds per step) and runs the ``jaxpr_lint`` rules:
+  no cache-sized layout ops, no vocab-sized outputs under fused sampling,
+  no host callbacks, cache-dtype stability;
+* captures the serving kernels' Pallas launches without running them
+  (``kernel_contracts.capture_launches``) and checks grids/BlockSpecs:
+  declared dimension semantics, no parallel write races, VMEM working set
+  under budget, scalar-prefetch arity/dtype;
+* unless ``--skip-trace-guard``, drives a short mixed-length workload
+  through the real engine under a :class:`TraceGuard` — one compiled shape
+  per step across admission, ragged prefill, decode, and slot recycling.
+
+``ANALYSIS.json`` records the rule catalog, per-config per-step findings,
+and every captured kernel launch (grid, semantics, block bytes, VMEM
+working set), schema-asserted before the write exactly like
+``BENCH_serve.json`` — CI uploads it as an artifact next to the benchmark
+report and fails on exit code.
+
+``--self-test`` routes deliberately seeded violations (a cache transpose in
+a step, a vocab-sized output, a host callback, a parallel reduce dim, an
+over-budget block, a float32 scalar-prefetch operand, a retraced step)
+through the same reporting pipeline: every rule must fire, and the exit
+code must be non-zero — the true-positive guarantee that a gate which only
+ever passes is actually running its rules.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+# the analyzer's serving shapes: big enough that cache-sized strictly
+# dominates every parameter/activation surface (see _cache_threshold), small
+# enough that eight engines build in seconds on CPU
+_MAX_SEQ = 4096
+_MAX_SLOTS = 4
+_CHUNK = 64
+_PAGE = 64
+
+
+def _matrix():
+    from repro.configs.base import ServeConfig
+    out = {}
+    for paged in (False, True):
+        for fused in (True, False):
+            for bounded in (True, False):
+                label = "_".join(("paged" if paged else "contig",
+                                  "fused" if fused else "logits",
+                                  "bounded" if bounded else "capacity"))
+                out[label] = ServeConfig(
+                    max_seq=_MAX_SEQ, prefill_chunk=_CHUNK,
+                    max_slots=_MAX_SLOTS, decode_kernel=True,
+                    prefill_kernel=True, fused_sampling=fused,
+                    fill_bound=bounded, paged_kv=paged, page_size=_PAGE,
+                    score_norm="consmax")
+    return out
+
+
+def _cache_threshold(cfg, scfg, step: str) -> int:
+    """Element count above which an operand is cache-sized for ``step``.
+
+    Decode touches the whole bank (all slots / the whole pool); a prefill
+    chunk touches one slot's rows (contiguous) or the pool (paged — the
+    scatter addresses pool leaves). The threshold must strictly dominate
+    every non-cache surface or the rule can false-positive on a parameter
+    cast; the embedding/head matrix (vocab x d_model) is the largest one."""
+    import numpy as np
+    hkv_dk = cfg.n_kv_heads * cfg.head_dim_
+    if scfg.paged_kv:
+        cells = scfg.num_pages * scfg.page_size * hkv_dk
+    elif step == "decode":
+        cells = scfg.max_slots * scfg.max_seq * hkv_dk
+    else:
+        cells = scfg.max_seq * hkv_dk
+    largest_param = cfg.vocab_size * cfg.d_model
+    if cells <= largest_param:
+        raise RuntimeError(
+            f"analyzer shapes too small: cache threshold {cells} does not "
+            f"dominate the vocab x d_model parameter surface "
+            f"{largest_param} — raise _MAX_SEQ")
+    return int(np.int64(cells))
+
+
+def _step_targets(cfg, scfg, eng):
+    """Trace the engine's jitted steps to (StepTarget, out-shape) pairs.
+    ``jax.make_jaxpr`` only traces — nothing compiles, and the jit caches
+    the TraceGuard watches are untouched."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_lint import StepTarget
+    b = scfg.max_slots
+    cache_in = tuple(jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda c: c, eng.caches)))
+
+    inputs = {"active": jnp.ones((b,), jnp.bool_),
+              "tokens": jnp.zeros((b,) if scfg.fused_sampling else (b, 1),
+                                  jnp.int32)}
+    table = None
+    if scfg.paged_kv:
+        table = jnp.full((b, scfg.max_pages_per_slot), -1, jnp.int32)
+        inputs["page_table"] = table
+    args = (eng.params, eng.caches, inputs)
+    if scfg.fused_sampling:
+        args += (eng.bank,)
+    dj, dshapes = jax.make_jaxpr(eng._decode, return_shape=True)(*args)
+
+    pj, pshapes = jax.make_jaxpr(eng._prefill, return_shape=True)(
+        eng.params, eng.caches, jnp.asarray(0, jnp.int32),
+        jnp.zeros((1, scfg.prefill_chunk), jnp.int32),
+        jnp.asarray([scfg.prefill_chunk], jnp.int32), eng.bank,
+        table[:1] if table is not None else None)
+
+    vocab = cfg.vocab_size if scfg.fused_sampling else None
+    return [
+        StepTarget("decode", dj,
+                   cache_cells=_cache_threshold(cfg, scfg, "decode"),
+                   vocab_size=vocab, cache_in=cache_in,
+                   cache_out=tuple(jax.tree_util.tree_leaves(dshapes[1]))),
+        StepTarget("prefill", pj,
+                   cache_cells=_cache_threshold(cfg, scfg, "prefill"),
+                   vocab_size=vocab, cache_in=cache_in,
+                   cache_out=tuple(jax.tree_util.tree_leaves(pshapes[1]))),
+    ]
+
+
+def _trace_guard_findings(cfg, eng):
+    """Drive a short mixed-length workload (ragged admissions, decode,
+    slot recycling) and demand one compiled shape per step."""
+    from jax import random
+
+    from repro.analysis.trace_guard import TraceGuard
+    from repro.serve.sampling import SamplingParams
+    guard = TraceGuard.for_engine(eng, limit=1)
+    prompts = [list(map(int, random.randint(random.key(11 + i), (n,), 0,
+                                            cfg.vocab_size)))
+               for i, n in enumerate((7, 3, 12))]
+    for i, (p, mx) in enumerate(zip(prompts, (4, 6, 3))):
+        eng.submit(p, mx, sampling=SamplingParams(temperature=0.8 + 0.2 * i,
+                                                  seed=i))
+    eng.run(max_steps=120)
+    return guard.counts(), guard.findings()
+
+
+def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
+    """One serve config through all three analysis layers. Returns the
+    per-config report dict and the list of findings."""
+    from repro.analysis.jaxpr_lint import run_rules
+    from repro.analysis.kernel_contracts import (check_launch,
+                                                 serving_launches)
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    findings = []
+    entry = {"serve": {"paged_kv": scfg.paged_kv,
+                       "fused_sampling": scfg.fused_sampling,
+                       "fill_bound": scfg.fill_bound,
+                       "max_seq": scfg.max_seq,
+                       "max_slots": scfg.max_slots},
+             "steps": {}, "kernels": {}, "trace_guard": None}
+
+    for target in _step_targets(cfg, scfg, eng):
+        step_findings = run_rules(target)
+        findings.extend(step_findings)
+        entry["steps"][target.name] = {
+            "cache_cells": target.cache_cells,
+            "findings": [f.to_json() for f in step_findings]}
+
+    for kname, launch in serving_launches(cfg, scfg).items():
+        kf = check_launch(launch)
+        findings.extend(kf)
+        entry["kernels"][kname] = dict(launch.to_json(),
+                                       findings=[f.to_json() for f in kf])
+
+    if trace_guard:
+        counts, tg = _trace_guard_findings(cfg, eng)
+        findings.extend(tg)
+        entry["trace_guard"] = {"counts": counts,
+                                "findings": [f.to_json() for f in tg]}
+    return entry, findings
+
+
+def _assert_schema(report, labels, *, trace_guard):
+    """The CI artifact contract (same idiom as BENCH_serve.json): a
+    refactor that drops a config, a step, a kernel launch, or the rule
+    catalog fails the gate instead of thinning the artifact."""
+    for key, typ in (("arch", str), ("rules", dict), ("configs", dict),
+                     ("violations", int), ("findings", list)):
+        assert isinstance(report.get(key), typ), (
+            f"ANALYSIS.json schema: missing/mistyped {key!r}")
+    assert report["rules"], "ANALYSIS.json schema: empty rule catalog"
+    for label in labels:
+        entry = report["configs"].get(label)
+        assert isinstance(entry, dict), (
+            f"ANALYSIS.json schema: config {label!r} missing")
+        for step in ("decode", "prefill"):
+            assert isinstance(entry["steps"].get(step), dict), (
+                f"ANALYSIS.json schema: {label}.steps[{step!r}] missing")
+        kind = "paged" if entry["serve"]["paged_kv"] else "contiguous"
+        for k in (f"decode_{kind}", f"prefill_{kind}"):
+            launch = entry["kernels"].get(k)
+            assert isinstance(launch, dict), (
+                f"ANALYSIS.json schema: {label}.kernels[{k!r}] missing")
+            for key in ("grid", "dimension_semantics",
+                        "vmem_working_set_bytes"):
+                assert key in launch, (
+                    f"ANALYSIS.json schema: {label}.kernels[{k!r}] "
+                    f"lacks {key!r}")
+        if trace_guard:
+            assert isinstance(entry.get("trace_guard"), dict), (
+                f"ANALYSIS.json schema: {label}.trace_guard missing")
+
+
+def run(arch="qwen2-1.5b", *, json_out="ANALYSIS.json",
+        trace_guard=True) -> int:
+    from jax import random
+
+    from repro.analysis.jaxpr_lint import rule_catalog
+    from repro.analysis.kernel_contracts import CHECK_CATALOG
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.nn.module import Ctx
+
+    cfg = get_config(arch, smoke=True)
+    params = T.lm_init(Ctx(random.key(0)), cfg)
+    matrix = _matrix()
+    report = {"arch": arch,
+              "rules": dict(rule_catalog(),
+                            **CHECK_CATALOG,
+                            **{"one-trace-per-step":
+                               "one compiled shape serves every fill level "
+                               "and slot count"}),
+              "configs": {}, "violations": 0, "findings": []}
+    all_findings = []
+    for label, scfg in matrix.items():
+        entry, findings = analyze_config(label, cfg, params, scfg,
+                                         trace_guard=trace_guard)
+        report["configs"][label] = entry
+        for f in findings:
+            all_findings.append(dict(f.to_json(), config=label))
+        status = "FAIL" if findings else "ok"
+        print(f"analyze {label:24s} {status}"
+              + (f"  ({len(findings)} findings)" if findings else ""))
+        for f in findings:
+            print(f"  [{f.rule}] {f.target}: {f.message}")
+    report["findings"] = all_findings
+    report["violations"] = len(all_findings)
+    _assert_schema(report, matrix.keys(), trace_guard=trace_guard)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"analyze: wrote {json_out} "
+              f"({report['violations']} violations)")
+    return 1 if all_findings else 0
+
+
+# ------------------------------------------------------------- self-test ----
+def _self_test(json_out) -> int:
+    """Seed one violation per rule through the real pipeline; every rule
+    must fire and the exit code must be non-zero."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_lint import StepTarget, run_rules
+    from repro.analysis.kernel_contracts import (BlockInfo, KernelLaunch,
+                                                 check_launch)
+    from repro.analysis.trace_guard import TraceGuard
+
+    findings = []
+
+    def bad_step(cache, logits):                     # transpose + vocab out
+        jax.debug.print("x={}", cache.sum())         # host callback
+        return cache.swapaxes(1, 2), logits
+    jaxpr, shapes = jax.make_jaxpr(bad_step, return_shape=True)(
+        jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.bfloat16),
+        jax.ShapeDtypeStruct((4, 512), jnp.float32))
+    findings += run_rules(StepTarget(
+        "seeded_step", jaxpr, cache_cells=4 * 4096 * 32, vocab_size=512,
+        cache_in=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.bfloat16),),
+        cache_out=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.float32),)))
+
+    race = KernelLaunch(
+        name="seeded_kernel", grid=(4, 8),
+        dimension_semantics=("parallel", "parallel"),   # dim 1 is a reduce
+        out_blocks=[BlockInfo((8, 128), "float32", 4 << 20, "vmem",
+                              index_map=lambda ib, ik: (ib, 0))],
+        num_scalar_prefetch=1, n_specs=1, n_operands=2,
+        scalar_avals=[((4,), "float32")])               # must be int32
+    findings += check_launch(race)
+
+    guard = TraceGuard()
+    retrace = jax.jit(lambda x: x * 2)
+    guard.track("seeded_retrace", retrace, limit=1)
+    retrace(jnp.zeros((2,)))
+    retrace(jnp.zeros((3,)))                         # second shape = retrace
+    findings += guard.findings()
+
+    fired = {f.rule for f in findings}
+    expected = {"no-cache-sized-layout-ops", "no-vocab-sized-outputs",
+                "no-host-callbacks", "cache-dtype-stability",
+                "parallel-write-race", "vmem-budget", "scalar-prefetch",
+                "one-trace-per-step"}
+    missing = expected - fired
+    assert not missing, f"self-test: rules did not fire: {sorted(missing)}"
+    report = {"arch": "self-test", "rules": {r: "seeded" for r in expected},
+              "configs": {}, "violations": len(findings),
+              "findings": [f.to_json() for f in findings]}
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+    print(f"analyze --self-test: all {len(expected)} rules fired "
+          f"({len(findings)} seeded findings) -> exit 1")
+    return 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serving-path static-analysis gate")
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--json-out", default="ANALYSIS.json",
+                    help="machine-readable report path ('' disables)")
+    ap.add_argument("--skip-trace-guard", action="store_true",
+                    help="static layers only — skip driving the engines "
+                         "(no compiles; seconds instead of minutes)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="seed one violation per rule; exit non-zero iff "
+                         "every rule fires")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return _self_test(args.json_out)
+    return run(args.arch, json_out=args.json_out,
+               trace_guard=not args.skip_trace_guard)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

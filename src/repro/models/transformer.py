@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import random
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard

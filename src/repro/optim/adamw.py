@@ -25,7 +25,8 @@ def warmup_cosine(tcfg: TrainConfig) -> Callable:
 
 
 def adam_init(params):
-    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros32(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {
         "m": jax.tree.map(zeros32, params),
         "v": jax.tree.map(zeros32, params),

@@ -2,13 +2,10 @@
 the state/axes trees the launcher uses for sharded jit."""
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.distributed.sharding import shard
 from repro.models import transformer as T
 from repro.nn import module as nn
 from repro.optim import adamw

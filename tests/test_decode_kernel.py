@@ -8,12 +8,9 @@ import pytest
 from jax import random
 
 from repro.core import attention as A
-from repro.core.consmax import consmax_init
-from repro.configs.base import ConSmaxConfig
 from repro.kernels.consmax_decode.ops import consmax_decode_op
 from repro.kernels.consmax_decode.ref import consmax_decode_ref
 from repro.kernels.consmax_attn.ops import consmax_attention_op
-from repro.nn.module import Ctx
 
 
 def _setup(key, b, L, nh, nkv, d, ragged=True):

@@ -31,6 +31,35 @@ def test_shape_bytes():
     assert shape_bytes("pred[]") == 1  # scalar -> 1 elem
 
 
+def test_shape_bytes_unknown_dtype_counted_not_costed():
+    """A dtype token missing from _DTYPE_BYTES (new XLA fp4/fp8 spellings)
+    must degrade to zero contributed bytes — never a KeyError — and be
+    reported through the ``unknown`` accumulator when the caller asks."""
+    unknown = {}
+    got = shape_bytes("(f4e2m1[128,256], f32[64])", unknown=unknown)
+    assert got == 256                      # only the f32 leg is costed
+    assert unknown == {"f4e2m1": 1}
+    # repeated occurrences accumulate into the same dict
+    assert shape_bytes("f4e2m1[8]", unknown=unknown) == 0
+    assert unknown == {"f4e2m1": 2}
+    # no accumulator passed: still no raise
+    assert shape_bytes("someday_dtype[2,2]") == 0
+
+
+def test_collective_stats_unknown_dtype_in_summary():
+    """An uncosted collective shows up as counted-but-uncosted in the
+    summary instead of silently thinning bytes_by_kind."""
+    hlo = HLO.replace("%ag = f32[128]{0} all-gather",
+                      "%ag = f4e2m1[128]{0} all-gather")
+    st = collective_stats(hlo, link_bw=50e9, num_devices=8)
+    assert st.bytes_by_kind["all-gather"] == 0      # uncosted ...
+    assert st.count_by_kind["all-gather"] == 1      # ... but counted
+    assert st.summary()["unknown_dtypes"] == {"f4e2m1": 1}
+    # the clean module keeps a clean summary (no vestigial empty key)
+    assert "unknown_dtypes" not in collective_stats(
+        HLO, link_bw=50e9, num_devices=8).summary()
+
+
 def test_collective_stats_counts_and_trips():
     st = collective_stats(HLO, link_bw=50e9, num_devices=8)
     # all-gather once: out 128*4 = 512B; group size 2

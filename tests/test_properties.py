@@ -8,19 +8,16 @@ import pytest
 
 pytest.importorskip("hypothesis")
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings, strategies as st
-from jax import random
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from jax import random  # noqa: E402
 
-from repro.configs.base import ConSmaxConfig
-from repro.core import consmax as C
-from repro.core import normalizers as N
-from repro.data.pipeline import DataConfig, SyntheticCorpus
-from repro.distributed.sharding import make_rules, resolve_spec
-from repro.nn.module import Ctx
-from repro.optim.compression import ef_compress_grads
+from repro.core import consmax as C  # noqa: E402
+from repro.core import normalizers as N  # noqa: E402
+from repro.data.pipeline import DataConfig, SyntheticCorpus  # noqa: E402
+from repro.distributed.sharding import make_rules, resolve_spec  # noqa: E402
+from repro.optim.compression import ef_compress_grads  # noqa: E402
 
 SETTINGS = dict(max_examples=25, deadline=None)
 

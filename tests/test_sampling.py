@@ -23,6 +23,7 @@ import numpy as np
 import pytest
 from jax import random
 
+from repro.analysis.jaxpr_lint import vocab_sized_avals
 from repro.configs.base import ServeConfig
 from repro.configs.registry import get_config
 from repro.models import transformer as T
@@ -262,10 +263,8 @@ def test_same_seed_same_prompt_regardless_of_cohabitants():
 
 
 # ----------------------------------------- aval + trace-count guarantees ----
-def _leaf_shapes(tree):
-    return [tuple(l.shape) for l in jax.tree_util.tree_leaves(tree)]
-
-
+# the vocab-sized-aval walk lives in repro.analysis.jaxpr_lint (shared with
+# the repro.launch.analyze CI gate)
 def test_decode_step_emits_tokens_not_logits():
     """The acceptance shape: the jitted decode step's output avals hold a
     (max_slots,) int32 token vector and NO vocab-sized array — the
@@ -278,18 +277,16 @@ def test_decode_step_emits_tokens_not_logits():
                          eng.bank)
     toks, caches = out
     assert toks.shape == (4,) and toks.dtype == jnp.int32
-    for shape in _leaf_shapes(out):
-        assert cfg.vocab_size not in shape, (
-            f"vocab-sized leaf {shape} in decode step outputs")
+    bad = vocab_sized_avals(out, cfg.vocab_size)
+    assert not bad, f"vocab-sized leaves {bad} in decode step outputs"
     # the prefill chunk step too: (1,) token out, no vocab-sized leaf
     pre = jax.eval_shape(eng._prefill, eng.params, eng.caches,
                          jnp.asarray(0, jnp.int32),
                          jnp.zeros((1, 4), jnp.int32),
                          jnp.asarray([4], jnp.int32), eng.bank, None)
     assert pre[0].shape == (1,) and pre[0].dtype == jnp.int32
-    for shape in _leaf_shapes(pre):
-        assert cfg.vocab_size not in shape, (
-            f"vocab-sized leaf {shape} in prefill step outputs")
+    bad = vocab_sized_avals(pre, cfg.vocab_size)
+    assert not bad, f"vocab-sized leaves {bad} in prefill step outputs"
 
 
 def test_heterogeneous_sampling_params_compile_one_shape():

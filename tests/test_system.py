@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system: the Fig.6-style claim
 (ConSmax-based GPT converges comparably to softmax) at smoke scale."""
-import numpy as np
 import pytest
 
 from repro.configs.base import TrainConfig

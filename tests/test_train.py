@@ -1,6 +1,5 @@
 """Training substrate: convergence, microbatch equivalence, AdamW details,
 checkpoint roundtrip + elastic restore, trainer fault-tolerance paths."""
-import os
 
 import jax
 import jax.numpy as jnp
