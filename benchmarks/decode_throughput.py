@@ -29,6 +29,14 @@ Four measurements:
   occupancy on the same queue, plus one decode step of the ``long_500k``
   shape served from a page pool holding FEWER total KV cells than
   ``max_slots x max_seq`` — the HBM claim of the paged design, measured.
+* **prefix_share** (every mode) — prefill tok/s and mean TTFT of a
+  shared-system-prompt workload at prefix-share ratios {0, 0.5, 0.9} on
+  the paged engine with the prefix cache on: the cache is seeded by one
+  request carrying the shared prefix, then a queue of requests sharing
+  that prefix is timed — the production steady state, where every request
+  after the first skips the shared rows' prefill entirely. Throughput
+  counts *submitted* prompt tokens, so the warm speedup is user-visible
+  tok/s, not an internal accounting trick.
 
 Besides the CSV rows on stdout, the run writes ``BENCH_serve.json``
 (``--json-out``) — decode tok/s (fused and host-sampling), prefill tok/s,
@@ -104,9 +112,13 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
     """``fused=False`` serves with the legacy host-sampling steps (logits
     shipped to the host per token) — the A/B baseline for the fused
     in-step epilogue."""
+    # prefix cache OFF: serve() runs the same queue twice (compile + timed),
+    # so a warm second pass would measure the prefix cache instead of the
+    # memory layout — the dedicated prefix_share rows measure that
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
                        decode_kernel=decode_kernel, paged_kv=paged,
-                       page_size=8 if paged else 256, fused_sampling=fused)
+                       page_size=8 if paged else 256, fused_sampling=fused,
+                       prefix_cache=False)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     # the analysis-layer trace guard replaces the old ad-hoc cache_size
     # asserts: the whole benchmark workload — ragged admissions, decode,
@@ -248,6 +260,62 @@ def _paged_long_step(cfg, params, rows, report):
                                  "contiguous": contiguous_cells}
 
 
+def _prefix_share_rows(cfg, params, rows, report):
+    """Prefill tok/s + mean TTFT at prefix-share ratios {0, 0.5, 0.9}.
+
+    One paged prefix-caching engine serves three rounds. Per round, N
+    one-token-budget requests share the first ``share * P`` prompt tokens
+    (page-aligned) with unique suffixes; a seed request carrying just the
+    shared prefix runs to completion first, so the timed queue measures
+    the steady-state warm path — the production shape, where every request
+    after the first shares the system prompt. tok/s counts *submitted*
+    prompt tokens over wall time: warm admissions prefill only the unique
+    suffix, and the saved chunks are exactly the speedup. Token streams
+    per round use distinct keys, so rounds cannot warm each other."""
+    P, n_req, chunk = 80, 6, 8
+    scfg = ServeConfig(max_seq=128, prefill_chunk=chunk, max_slots=2,
+                       paged_kv=True, page_size=8, num_pages=48)
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    guard = TraceGuard.for_engine(eng, limit=1)
+    # compile the cold path, then the warm path (set_index + tail re-score)
+    warm = random.randint(random.key(99), (P,), 0, cfg.vocab_size).tolist()
+    eng.submit(warm, 1)
+    eng.run()
+    eng.submit(warm[:40], 1)
+    eng.run()
+    tok_s = {}
+    for share, label in ((0.0, "0"), (0.5, "50"), (0.9, "90")):
+        key = random.fold_in(random.key(3), int(share * 100))
+        pre = int(P * share)                        # 0/40/72: page-aligned
+        common = random.randint(random.fold_in(key, 0), (P,), 0,
+                                cfg.vocab_size).tolist()
+        if pre:
+            eng.submit(common[:pre], 1)             # seed the prefix cache
+            eng.run()
+        prompts = [common[:pre]
+                   + random.randint(random.fold_in(key, 1 + i), (P - pre,),
+                                    0, cfg.vocab_size).tolist()
+                   for i in range(n_req)]
+        t0 = time.perf_counter()
+        uids = [eng.submit(p, 1) for p in prompts]
+        eng.run()
+        dt = time.perf_counter() - t0
+        tps = n_req * P / dt
+        ttft_ms = 1e3 * float(np.mean([eng.ttft[u] for u in uids]))
+        tok_s[label] = tps
+        rows.append((f"serve/prefix_share_{label}_prefill_tok_s",
+                     f"{tps:.1f}", f"share={share};P={P};n={n_req}"))
+        rows.append((f"serve/prefix_share_{label}_ttft_ms", f"{ttft_ms:.2f}",
+                     "mean_submit_to_first_token"))
+        report["prefix_share"][f"share{label}_prefill_tok_s"] = tps
+        report["prefix_share"][f"share{label}_ttft_ms"] = ttft_ms
+    guard.assert_ok()
+    speedup = tok_s["90"] / tok_s["0"]
+    rows.append(("serve/prefix_share_90_speedup", f"{speedup:.2f}x",
+                 "submitted_prompt_tok_s_vs_share0"))
+    report["prefix_share"]["share90_speedup_vs_share0"] = speedup
+
+
 def _assert_schema(report, batches, cache_lens, step_batches, paged):
     """The CI artifact contract: a refactor that silently drops a key (or
     writes a non-numeric value) fails the benchmark run instead of
@@ -255,7 +323,7 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
     for key, typ in (("arch", str), ("mode", str), ("paged", bool),
                      ("decode_tok_s", dict), ("prefill_tok_s", dict),
                      ("decode_step_us", dict), ("decode_step_fill_us", dict),
-                     ("page_occupancy", dict)):
+                     ("page_occupancy", dict), ("prefix_share", dict)):
         assert isinstance(report.get(key), typ), (
             f"BENCH_serve.json schema: missing/mistyped {key!r}")
     num = (int, float)
@@ -276,6 +344,15 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
                       f"L{L}_b{b}_fused"):
                 assert isinstance(report["decode_step_us"].get(k), num), (
                     f"BENCH_serve.json schema: decode_step_us[{k!r}] missing")
+    # prefix-share rows also run in every mode: the warm-admission path is
+    # the tentpole claim, so the artifact must always carry it
+    for lbl in ("0", "50", "90"):
+        for k in (f"share{lbl}_prefill_tok_s", f"share{lbl}_ttft_ms"):
+            assert isinstance(report["prefix_share"].get(k), num), (
+                f"BENCH_serve.json schema: prefix_share[{k!r}] missing")
+    assert isinstance(report["prefix_share"].get("share90_speedup_vs_share0"),
+                      num), ("BENCH_serve.json schema: prefix_share speedup "
+                             "row missing")
     # fill-sweep rows run in every mode on the acceptance shape: losing them
     # means the fill-bounded path silently stopped being measured
     for frac in ("25", "100"):
@@ -302,7 +379,8 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
     report = {"arch": arch, "mode": "full" if full else "quick",
               "paged": paged, "decode_tok_s": {}, "prefill_tok_s": {},
               "decode_step_us": {}, "decode_step_fill_us": {},
-              "page_occupancy": {}, "long_500k_step_us": None}
+              "page_occupancy": {}, "prefix_share": {},
+              "long_500k_step_us": None}
 
     # ---- engine: static vs continuous on the same request queue ----
     batches = (1, 8, 64) if full else (1, 4, 8)
@@ -404,6 +482,9 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
     # ---- paged: the long_500k shape on a sub-contiguous page pool ----
     if paged:
         _paged_long_step(cfg, params, rows, report)
+
+    # ---- prefix sharing: warm-admission tok/s + TTFT, every mode ----
+    _prefix_share_rows(cfg, params, rows, report)
     _assert_schema(report, batches, cache_lens, step_batches, paged)
     if json_out:
         with open(json_out, "w") as f:

@@ -49,10 +49,17 @@ class TraceGuard:
 
     @classmethod
     def for_engine(cls, engine, limit: int = 1) -> "TraceGuard":
-        """Guard a ContinuousBatchingEngine's prefill and decode steps."""
+        """Guard a ContinuousBatchingEngine's prefill and decode steps —
+        plus, on paged engines, the prefix-cache helpers (warm-admission
+        index pin and COW page copy), which are bound by the same
+        one-compile contract."""
         guard = cls()
         guard.track("prefill_step", engine._prefill, limit)
         guard.track("decode_step", engine._decode, limit)
+        for label in ("_set_index", "_copy_page"):
+            fn = getattr(engine, label, None)
+            if fn is not None:
+                guard.track(label.lstrip("_"), fn, limit)
         return guard
 
     def counts(self) -> dict[str, int]:

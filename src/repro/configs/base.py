@@ -189,6 +189,15 @@ class ServeConfig:
                                      # max_slots * ceil(max_seq / page_size)
                                      # (no oversubscription — set lower to
                                      # share pages across short requests)
+    prefix_cache: bool = True        # prefix-sharing page cache: identical
+                                     # prompt prefixes map to the same
+                                     # physical pages (refcounted, COW);
+                                     # warm requests skip the shared rows'
+                                     # prefill entirely
+    prefix_evict: str = "lru"        # reclaim order for refcount-0 cached
+                                     # pages when the free list runs dry:
+                                     # "lru" (release order) | "fifo"
+                                     # (registration order)
 
     def __post_init__(self):
         # invalid shapes fail HERE, not deep inside _append_cache_write /
@@ -240,6 +249,10 @@ class ServeConfig:
                     f"ServeConfig: num_pages ({self.num_pages}) below "
                     f"max_pages_per_slot ({self.max_pages_per_slot}) — even "
                     "a single max_seq request could not be served")
+            if self.prefix_evict not in ("lru", "fifo"):
+                raise ValueError(
+                    f"ServeConfig: prefix_evict must be 'lru' or 'fifo', "
+                    f"got {self.prefix_evict!r}")
 
     @property
     def max_pages_per_slot(self) -> int:

@@ -8,7 +8,9 @@ violation.
 
 For every registered serve config — {contiguous, paged} x {fused sampling,
 legacy logits} x {fill-bounded, capacity-swept}, all with both serving
-kernels on — the gate:
+kernels on, plus ``paged_prefix`` (the prefix-sharing cache driven over a
+warm-admission workload: cached re-serve, tail re-score, live-sharer
+copy-on-write) — the gate:
 
 * traces the engine's jitted prefill and decode steps to jaxprs (a trace,
   not a compile — milliseconds per step) and runs the ``jaxpr_lint`` rules:
@@ -66,6 +68,15 @@ def _matrix():
                     prefill_kernel=True, fused_sampling=fused,
                     fill_bound=bounded, paged_kv=paged, page_size=_PAGE,
                     score_norm="consmax")
+    # the prefix-sharing cache on the production paged config: same static
+    # shape as paged_fused_bounded, but analyzed over the WARM path — the
+    # set_index/copy_page helper jaxprs join the step targets, and the
+    # trace-guard workload drives cached admission, tail re-score, and a
+    # live-sharer copy-on-write instead of cold traffic
+    out["paged_prefix"] = ServeConfig(
+        max_seq=_MAX_SEQ, prefill_chunk=_CHUNK, max_slots=_MAX_SLOTS,
+        decode_kernel=True, prefill_kernel=True, paged_kv=True,
+        page_size=_PAGE, prefix_cache=True, score_norm="consmax")
     return out
 
 
@@ -94,14 +105,17 @@ def _cache_threshold(cfg, scfg, step: str) -> int:
     return int(np.int64(cells))
 
 
-def _step_targets(cfg, scfg, eng):
+def _step_targets(cfg, scfg, eng, *, prefix=False):
     """Trace the engine's jitted steps to (StepTarget, out-shape) pairs.
     ``jax.make_jaxpr`` only traces — nothing compiles, and the jit caches
-    the TraceGuard watches are untouched."""
+    the TraceGuard watches are untouched. ``prefix=True`` adds the warm-
+    admission helpers (index pin, COW page copy) — they rewrite pool-sized
+    leaves, so the cache-layout and dtype rules apply to them verbatim."""
     import jax
     import jax.numpy as jnp
 
     from repro.analysis.jaxpr_lint import StepTarget
+    from repro.models import transformer as T
     b = scfg.max_slots
     cache_in = tuple(jax.tree_util.tree_leaves(
         jax.eval_shape(lambda c: c, eng.caches)))
@@ -125,7 +139,7 @@ def _step_targets(cfg, scfg, eng):
         table[:1] if table is not None else None)
 
     vocab = cfg.vocab_size if scfg.fused_sampling else None
-    return [
+    targets = [
         StepTarget("decode", dj,
                    cache_cells=_cache_threshold(cfg, scfg, "decode"),
                    vocab_size=vocab, cache_in=cache_in,
@@ -135,6 +149,22 @@ def _step_targets(cfg, scfg, eng):
                    vocab_size=vocab, cache_in=cache_in,
                    cache_out=tuple(jax.tree_util.tree_leaves(pshapes[1]))),
     ]
+    if prefix:
+        zero = jnp.asarray(0, jnp.int32)
+        cells = _cache_threshold(cfg, scfg, "decode")
+        sj, ss = jax.make_jaxpr(T.set_slot_index, return_shape=True)(
+            eng.caches, zero, zero)
+        cj, cs = jax.make_jaxpr(T.copy_kv_page, return_shape=True)(
+            eng.caches, zero, zero)
+        targets += [
+            StepTarget("set_index", sj, cache_cells=cells, vocab_size=vocab,
+                       cache_in=cache_in,
+                       cache_out=tuple(jax.tree_util.tree_leaves(ss))),
+            StepTarget("copy_page", cj, cache_cells=cells, vocab_size=vocab,
+                       cache_in=cache_in,
+                       cache_out=tuple(jax.tree_util.tree_leaves(cs))),
+        ]
+    return targets
 
 
 def _trace_guard_findings(cfg, eng):
@@ -155,6 +185,33 @@ def _trace_guard_findings(cfg, eng):
     return guard.counts(), guard.findings()
 
 
+def _prefix_trace_guard_findings(cfg, scfg, eng):
+    """Warm-admission workload for the prefix-cache config: one cold page-
+    aligned prompt seeds the cache; a fully-cached re-serve drives the
+    warm path (index pin + one-chunk tail re-score); two concurrent warm
+    sharers force a copy-on-write; an extended prompt takes a partial hit.
+    One compiled shape per step — including the set_index and copy_page
+    helpers, which TraceGuard.for_engine tracks on paged engines."""
+    from jax import random
+
+    from repro.analysis.trace_guard import TraceGuard
+    guard = TraceGuard.for_engine(eng, limit=1)
+    ps = scfg.page_size
+    prompt = list(map(int, random.randint(random.key(17), (2 * ps,), 0,
+                                          cfg.vocab_size)))
+    eng.submit(prompt, 4)                  # cold: registers both pages
+    eng.run(max_steps=60)
+    eng.submit(prompt, 3)                  # fully cached: tail re-score
+    eng.submit(prompt, 2)                  # live sharer: COW on the tail
+    eng.submit(prompt + prompt[:ps], 2)    # partial hit + fresh suffix
+    eng.run(max_steps=120)
+    # workload sanity: a warm run that never hit the cache or never COWed
+    # would pass the trace guard while analyzing the wrong path
+    assert eng.pool.prefix_hit_rows > 0, "warm workload produced no hits"
+    assert eng.pool.cow_copies >= 1, "warm workload never fired COW"
+    return guard.counts(), guard.findings()
+
+
 def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
     """One serve config through all three analysis layers. Returns the
     per-config report dict and the list of findings."""
@@ -163,16 +220,18 @@ def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
                                                  serving_launches)
     from repro.serve.engine import ContinuousBatchingEngine
 
+    prefix = label == "paged_prefix"
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     findings = []
     entry = {"serve": {"paged_kv": scfg.paged_kv,
                        "fused_sampling": scfg.fused_sampling,
                        "fill_bound": scfg.fill_bound,
+                       "prefix_cache": scfg.paged_kv and scfg.prefix_cache,
                        "max_seq": scfg.max_seq,
                        "max_slots": scfg.max_slots},
              "steps": {}, "kernels": {}, "trace_guard": None}
 
-    for target in _step_targets(cfg, scfg, eng):
+    for target in _step_targets(cfg, scfg, eng, prefix=prefix):
         step_findings = run_rules(target)
         findings.extend(step_findings)
         entry["steps"][target.name] = {
@@ -186,7 +245,8 @@ def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
                                        findings=[f.to_json() for f in kf])
 
     if trace_guard:
-        counts, tg = _trace_guard_findings(cfg, eng)
+        counts, tg = (_prefix_trace_guard_findings(cfg, scfg, eng) if prefix
+                      else _trace_guard_findings(cfg, eng))
         findings.extend(tg)
         entry["trace_guard"] = {"counts": counts,
                                 "findings": [f.to_json() for f in tg]}
@@ -206,7 +266,10 @@ def _assert_schema(report, labels, *, trace_guard):
         entry = report["configs"].get(label)
         assert isinstance(entry, dict), (
             f"ANALYSIS.json schema: config {label!r} missing")
-        for step in ("decode", "prefill"):
+        steps = ("decode", "prefill")
+        if label == "paged_prefix":
+            steps += ("set_index", "copy_page")
+        for step in steps:
             assert isinstance(entry["steps"].get(step), dict), (
                 f"ANALYSIS.json schema: {label}.steps[{step!r}] missing")
         kind = "paged" if entry["serve"]["paged_kv"] else "contiguous"

@@ -86,6 +86,15 @@ def main():
                     help="pool capacity; 0 = max_slots * "
                          "ceil(max_seq / page_size), i.e. no sharing gain — "
                          "set lower to oversubscribe slots onto fewer cells")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the prefix-sharing page cache (paged "
+                         "engine only): every admission prefills from row "
+                         "0 even when an identical prompt prefix already "
+                         "sits in pool pages")
+    ap.add_argument("--prefix-evict", choices=("lru", "fifo"), default="lru",
+                    help="reclaim order for refcount-0 cached pages when "
+                         "the free list runs dry: lru = release order, "
+                         "fifo = registration order")
     args = ap.parse_args()
 
     import dataclasses
@@ -142,7 +151,9 @@ def main():
                        fused_sampling=fused,
                        score_norm=cfg.score_norm,
                        paged_kv=args.paged, page_size=args.page_size,
-                       num_pages=args.num_pages)
+                       num_pages=args.num_pages,
+                       prefix_cache=not args.no_prefix_cache,
+                       prefix_evict=args.prefix_evict)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     rng = random.key(1)
     uids = []
@@ -172,6 +183,11 @@ def main():
               f"{scfg.page_size} rows "
               f"(peak in use {eng.pool.peak_in_use}) vs "
               f"{args.max_slots} x {scfg.max_seq} contiguous rows")
+        if scfg.prefix_cache:
+            print(f"[serve/continuous] prefix cache ({scfg.prefix_evict}): "
+                  f"{eng.pool.prefix_hit_rows} prompt rows served from "
+                  f"cached pages, {eng.pool.cow_copies} cow copies, "
+                  f"{eng.pool.evictions} evictions")
     if uids:
         print("[serve/continuous] sample:", results[uids[0]])
 

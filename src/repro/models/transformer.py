@@ -266,6 +266,30 @@ def reset_slot_paged(caches, slot):
         lambda p, a: a.at[:, slot].set(0) if _is_index(p) else a, caches)
 
 
+def set_slot_index(caches, slot, value):
+    """Set slot ``slot``'s fill index to ``value`` across all layers. Warm
+    prefix-cache admission needs this: the slot's page-table rows already
+    point at cached pages holding ``value`` KV rows, so the device fill
+    index must start past them for the first prefill chunk to append at
+    the right position."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, a: a.at[:, slot].set(jnp.asarray(value, a.dtype))
+        if _is_index(p) else a, caches)
+
+
+def copy_kv_page(caches, src, dst):
+    """Copy physical K/V page ``src`` onto page ``dst`` in every layer of a
+    *paged* cache (page axis 1, after the layer stack); ``index`` leaves
+    untouched. This is the device half of copy-on-write: the allocator
+    (PagePool.ensure_writable / fork) picks the pages, the engine runs this
+    before a slot writes into a page it no longer shares."""
+    def cp(path, a):
+        if _is_index(path):
+            return a
+        return a.at[:, dst].set(a[:, src])
+    return jax.tree_util.tree_map_with_path(cp, caches)
+
+
 def cache_axes(cfg: ModelConfig):
     """Logical axes tree matching init_caches output."""
     def one_super():

@@ -49,6 +49,7 @@ else raises at construction).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -349,6 +350,19 @@ class ContinuousBatchingEngine:
     online-softmax combine, and the paged split-KV kernel iterates
     page-table entries straight from a scalar-prefetch operand.
 
+    Paged engines also prefix-cache (``ServeConfig.prefix_cache``): the
+    allocator hashes each slot's fully prefilled prompt pages (chained,
+    page-aligned token hashes) and a later request with a matching prefix
+    admits *warm* — its table rows point at the shared physical pages, its
+    fill index starts past them, and the only prefill compute left is the
+    uncached suffix (a fully cached prompt re-scores just its final token
+    to produce the sampling logits, copy-on-writing the shared last page).
+    The kernels are untouched: they always indirected through the table,
+    so "many slots, one page" is purely an allocator-side fact. ConSmax
+    again is the enabler — a cached page's attention contribution is a
+    slot-independent pure-addition partial, so no per-slot softmax
+    renormalization state has to be rebuilt for shared pages.
+
     Restricted to pure-attention token archs: chunked prefill appends into
     attention KV caches; recurrent (mamba/xlstm) state and cross-attention
     cond streams stay on the static ``ServeSession`` path.
@@ -373,7 +387,9 @@ class ContinuousBatchingEngine:
             # slot; the host-side PagePool maps (slot, logical page) ->
             # pool page and gates admission on worst-case reservations
             self.pool = PagePool(scfg.num_pages, scfg.page_size,
-                                 scfg.max_slots, scfg.max_pages_per_slot)
+                                 scfg.max_slots, scfg.max_pages_per_slot,
+                                 prefix_cache=scfg.prefix_cache,
+                                 evict=scfg.prefix_evict)
             self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq,
                                        page_pool=self.pool)
             self.caches = T.init_paged_caches(
@@ -385,6 +401,10 @@ class ContinuousBatchingEngine:
             self.caches = T.init_caches(cfg, scfg.max_slots, scfg.max_seq,
                                         kv_dtype=kv_dtype)
         self.results: dict[int, list[int]] = {}
+        self.prefilled_tokens = 0          # chunk tokens actually computed —
+                                           # warm admissions skip cached rows
+        self.ttft: dict[int, float] = {}   # uid -> seconds submit->1st token
+        self._t_submit: dict[int, float] = {}
         self._steps = 0
         self._submits = 0                  # drives default-policy seed + k
         self._chunk = scfg.prefill_chunk
@@ -452,10 +472,19 @@ class ContinuousBatchingEngine:
         self._reset = jax.jit(
             T.reset_slot_paged if self.paged else T.reset_slot,
             donate_argnums=(0,))
+        if self.paged:
+            # warm-admission index pin + COW page copy: the device half of
+            # the allocator's prefix-sharing bookkeeping, one compiled
+            # variant each for the engine's lifetime
+            self._set_index = jax.jit(T.set_slot_index, donate_argnums=(0,))
+            self._copy_page = jax.jit(T.copy_kv_page, donate_argnums=(0,))
+        else:
+            self._set_index = self._copy_page = None
 
     # --------------------------------------------------------- frontend ----
     def submit(self, prompt, max_new_tokens: int, eos_id: int | None = None,
-               sampling: SamplingParams | None = None) -> int:
+               sampling: SamplingParams | None = None,
+               n: int = 1) -> int | list[int]:
         """Queue a request; returns its uid (key into results after run).
 
         ``sampling`` defaults to the engine's ``default_sampling``; that
@@ -463,24 +492,51 @@ class ContinuousBatchingEngine:
         order) derives ``seed + k``, so two default-policy requests with
         the same prompt still sample independently. Pass an explicit
         ``sampling`` to pin a stream exactly (identical explicit seeds
-        deliberately reproduce each other). Greedy when both are None."""
+        deliberately reproduce each other). Greedy when both are None.
+
+        ``n > 1`` submits n parallel samples of the same prompt (returns a
+        list of uids): stream i derives ``seed + i`` from an explicit
+        ``sampling`` (the default policy already varies per submit). On a
+        paged engine with the prefix cache enabled the streams share the
+        prompt's physical KV pages — the first to prefill registers them,
+        every later one admits warm with only the 1-token tail re-score,
+        copy-on-write keeping their generated rows private."""
+        if n < 1:
+            raise ValueError(f"submit: n must be >= 1, got {n}")
+        if n == 1:
+            return self._submit_one(prompt, max_new_tokens, eos_id, sampling)
+        uids = []
+        for i in range(n):
+            sp = sampling
+            if sp is not None and i:
+                sp = dataclasses.replace(sp, seed=(sp.seed + i) % 2**32)
+            uids.append(self._submit_one(prompt, max_new_tokens, eos_id, sp))
+        return uids
+
+    def _submit_one(self, prompt, max_new_tokens, eos_id, sampling) -> int:
         sp = sampling
         if sp is None and self.default_sampling is not None:
             sp = dataclasses.replace(
                 self.default_sampling,
                 seed=(self.default_sampling.seed + self._submits) % 2**32)
         self._submits += 1
-        return self.scheduler.submit(prompt, max_new_tokens, eos_id,
-                                     sampling=sp)
+        uid = self.scheduler.submit(prompt, max_new_tokens, eos_id,
+                                    sampling=sp)
+        self._t_submit[uid] = time.perf_counter()
+        return uid
 
     def run(self, max_steps: int | None = None) -> dict[int, list[int]]:
         """Drive admissions + decode until the queue and slots drain.
-        ``max_steps`` bounds this call, not the engine lifetime."""
-        start = self._steps
+        ``max_steps`` bounds this call, not the engine lifetime — and it
+        counts *iterations*, including zero-progress ones (nothing to
+        admit, prefill, or decode), so a request the pool can never admit
+        cannot spin this loop forever."""
+        iters = 0
         while self.scheduler.has_work():
-            if max_steps is not None and self._steps - start >= max_steps:
+            if max_steps is not None and iters >= max_steps:
                 break
             self.step()
+            iters += 1
         return self.results
 
     def step(self):
@@ -493,6 +549,15 @@ class ContinuousBatchingEngine:
                 break
             slot, req = admitted
             self.bank = S.bank_put(self.bank, slot, req.sampling)
+            state = self.scheduler.slots[slot]
+            if self.paged and state.filled:
+                # warm admission: the slot's table rows already point at
+                # cached pages holding rows [0, filled) — pin the device
+                # fill index past them so the first prefill chunk appends
+                # at the first uncached row
+                self.caches = self._set_index(
+                    self.caches, jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(state.filled, jnp.int32))
         plan = self.scheduler.prefill_plan(self._chunk, self._budget)
         for slot, start, n in plan:
             self._prefill_one(slot, start, n)
@@ -544,15 +609,29 @@ class ContinuousBatchingEngine:
         chunk = prompt[start:start + n] + [0] * (self._chunk - n)
         page_row = None
         if self.paged:
-            # map pages for rows [0, start + n) before the device write
-            self.pool.ensure(slot, start + n)
+            # back rows [0, start + n) and privatize any page in the write
+            # window still shared with another slot — the 1-token tail
+            # re-score of a fully cached prompt lands in the shared last
+            # page, so its COW copy must run before this chunk's K/V write
+            _, copies = self.pool.ensure_writable(slot, start, start + n)
+            for src, dst in copies:
+                self.caches = self._copy_page(
+                    self.caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
             page_row = self._device_table()[slot:slot + 1]
+        self.prefilled_tokens += n
         out, self.caches = self._prefill(
             self.params, self.caches, jnp.asarray(slot, jnp.int32),
             jnp.asarray(chunk, jnp.int32)[None, :],
             jnp.asarray([n], jnp.int32), self.bank if self.fused else None,
             page_row)
-        if self.scheduler.record_prefill(slot, n):
+        done = self.scheduler.record_prefill(slot, n)
+        if self.paged:
+            # register the newly completed prompt pages so later identical
+            # prefixes admit warm
+            state = self.scheduler.slots[slot]
+            self.pool.commit_prefix(slot, prompt, state.filled)
+        if done:
             # prompt complete: the chunk's output is the first token of the
             # request (sampled in-step when fused; from logits otherwise)
             if self.fused:
@@ -563,6 +642,9 @@ class ContinuousBatchingEngine:
                 tok = int(S.sample_tokens(
                     out, S.bank_take(self.bank, slice(slot, slot + 1)),
                     jnp.asarray([state.filled], jnp.int32))[0])
+            uid = self.scheduler.slots[slot].request.uid
+            if uid in self._t_submit:
+                self.ttft[uid] = time.perf_counter() - self._t_submit.pop(uid)
             if self.scheduler.record(slot, tok):
                 self._finish(slot)
 
@@ -573,8 +655,16 @@ class ContinuousBatchingEngine:
             active[slot] = True
             if self.paged:
                 # this step writes the last sampled token's K/V at row
-                # filled + generated - 1; make sure that row has a page
-                self.pool.ensure(slot, state.filled + len(state.generated))
+                # filled + generated - 1; make sure that row has a page the
+                # slot owns exclusively (prefill already privatized the
+                # prefix tail, so this window never actually copies — but
+                # the COW invariant is enforced here, not assumed)
+                rows = state.filled + len(state.generated)
+                _, copies = self.pool.ensure_writable(slot, rows - 1, rows)
+                for src, dst in copies:
+                    self.caches = self._copy_page(
+                        self.caches, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
         if self.fused:
             # device-side feedback: last tokens in, next tokens out — the
             # only host traffic is draining the (max_slots,) token vector

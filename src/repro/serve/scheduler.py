@@ -19,16 +19,19 @@ logits and the slot joins the decode batch.
 
 This module is pure Python bookkeeping: who sits where, what was generated,
 which sampling params a request carries (opaquely — the engine mirrors them
-into its device-resident bank at admission), when a slot frees up — plus, for paged KV serving, ``PagePool``: the int32
-free-list allocator that maps each slot's logical KV rows onto shared pool
-pages and gates admission on worst-case reservations. All device work
-(chunked prefill, decode, cache updates) lives in
+into its device-resident bank at admission), when a slot frees up — plus,
+for paged KV serving, ``PagePool``: the refcounted, prefix-caching int32
+allocator that maps each slot's logical KV rows onto shared pool pages,
+gates admission on worst-case reservations, and lets identical prompt
+prefixes share physical pages copy-on-write. All device work (chunked
+prefill, decode, cache updates, COW page copies) lives in
 engine.ContinuousBatchingEngine, which drives this scheduler.
 """
 from __future__ import annotations
 
+import hashlib
 import itertools
-from collections import deque
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -36,39 +39,95 @@ import numpy as np
 PREFILLING = "prefilling"
 DECODING = "decoding"
 
+# Root of every prefix-hash chain. A page's key commits to every token
+# before it (h_i = sha256(h_{i-1} || page i's token ids)), so two equal
+# keys mean two equal *full prefixes* — a plain per-page token hash would
+# alias "the quick" at positions 0..P with "the quick" at positions P..2P.
+_CHAIN_ROOT = b"consmax-prefix-v1"
+
+
+def _chain_key(prev: bytes, tokens) -> bytes:
+    return hashlib.sha256(
+        prev + np.asarray(tokens, np.int64).tobytes()).digest()
+
 
 class PagePool:
-    """Int32 free-list allocator for a shared KV page pool.
+    """Refcounted, prefix-caching page allocator for a shared KV pool.
 
     The device holds ONE ``(num_pages, page_size, hkv, dk)`` K/V buffer per
     layer; this class owns the host-side mapping from (slot, logical page
     index) to pool page ids. ``table`` is the dense ``(max_slots,
     max_pages_per_slot)`` int32 page table the jitted steps consume verbatim
-    (-1 = unmapped); the free list is a LIFO stack of page ids.
+    (-1 = unmapped). Because the jitted kernels only ever *indirect* through
+    the table, several slots may map the same physical page — which is the
+    whole trick.
 
-    Allocation is on demand (``ensure`` maps pages as a slot's fill level
-    grows) but admission is reservation-based: ``reserve`` commits the
-    slot's *worst-case* page count (prompt + token budget) up front, and
-    ``ensure`` never maps beyond a slot's reservation — so the pool can
-    never deadlock with every slot mid-request and no page free. Invariants
-    (property-tested in tests/test_paged_kv.py):
+    Page lifecycle::
 
-    * a page id is owned by at most one slot,
-    * free pages + mapped pages always sum to ``num_pages``,
-    * ``release(slot)`` returns every page the slot held.
+        free ──alloc──▶ pinned (refcount ≥ 1) ──release──▶ free
+                           │                        │
+                           │ registered under a     ▼
+                           │ prefix key          evictable (refcount 0,
+                           ▼                     K/V intact, attachable)
+                        shared by later              │ free list empty
+                        slots via reserve_prefix ◀───┘ → evicted (key
+                                                        dropped, reused)
+
+    * ``reserve`` / ``reserve_prefix`` commit a slot's *worst-case* page
+      count up front (prompt + token budget), so the pool can never
+      deadlock with every slot mid-request and no page reclaimable. For a
+      warm request only the pages NOT served from the prefix cache are
+      counted against supply — the saved pages are exactly the capacity
+      the cache buys.
+    * ``ensure`` maps fresh pages on demand as a slot's fill level grows;
+      ``ensure_writable`` additionally copy-on-writes any page in the
+      write window whose refcount > 1.
+    * ``commit_prefix`` registers a slot's fully prefilled prompt pages
+      under their chain keys; ``release`` parks refcount-0 registered
+      pages on the evictable list instead of the free list, and eviction
+      (lru or fifo over release/registration order) happens only when the
+      free list runs dry.
+
+    Invariants (property-tested in tests/test_paged_kv.py):
+
+    * ``refcount[p]`` equals the number of slot table rows mapping ``p``,
+    * free, evictable and pinned pages partition the pool; no page is
+      freed or evicted while its refcount > 0,
+    * a slot never maps more pages than its reservation,
+    * ``version`` strictly increases, at most once per mutating call.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
-                 max_pages_per_slot: int):
+                 max_pages_per_slot: int, prefix_cache: bool = True,
+                 evict: str = "lru"):
+        if evict not in ("lru", "fifo"):
+            raise ValueError(f"evict must be 'lru' or 'fifo', got {evict!r}")
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
+        self.prefix_cache = prefix_cache
+        self.evict = evict
         self.table = np.full((max_slots, max_pages_per_slot), -1, np.int32)
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self.refcount = [0] * num_pages    # table rows mapping each page
+        self._page_key: list[bytes | None] = [None] * num_pages
+        self._index: dict[bytes, int] = {}     # chain key -> page id
+        # refcount-0 registered pages, in release order (lru eviction pops
+        # the front; fifo eviction uses _seq, the registration order)
+        self._evictable: OrderedDict[int, bytes] = OrderedDict()
+        self._seq = [0] * num_pages
+        self._seqno = 0
         self._held = [0] * max_slots       # pages currently mapped per slot
         self._reserved = [0] * max_slots   # worst-case pages per slot
+        # remaining *new-page* allocation rights per slot: decremented on
+        # every fresh alloc (including COW copies). Admission gates on the
+        # sum of these, not on _reserved — shared pages are free capacity.
+        self._outstanding = [0] * max_slots
         self.peak_in_use = 0
         self.peak_reserved = 0
+        self.cow_copies = 0                # pages privatized before a write
+        self.evictions = 0                 # cached pages reclaimed for reuse
+        self.prefix_hit_rows = 0           # KV rows served from the cache
         self.version = 0                   # bumped on every table mutation —
                                            # lets the engine keep a device
                                            # copy and re-upload only on change
@@ -76,11 +135,19 @@ class PagePool:
     # ------------------------------------------------------------ stats ----
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now: the free list plus the evictable
+        prefix-cache pages (refcount 0; reclaimed on demand)."""
+        return len(self._free) + len(self._evictable)
+
+    @property
+    def cached_pages(self) -> int:
+        """Evictable prefix-cache pages (refcount 0, K/V intact)."""
+        return len(self._evictable)
 
     @property
     def in_use(self) -> int:
-        return self.num_pages - len(self._free)
+        """Pinned pages: mapped by at least one slot (refcount ≥ 1)."""
+        return self.num_pages - self.free_pages
 
     @property
     def reserved_pages(self) -> int:
@@ -88,8 +155,17 @@ class PagePool:
         including reserved-but-unmapped pages, which ``in_use`` /
         ``occupancy()`` cannot see (a slot that reserved and never
         ``ensure``d holds zero pool pages yet still gates admission).
-        ``reserved_pages - in_use`` is the invisible admission pressure."""
+        With prefix sharing this can exceed ``num_pages`` — the excess is
+        exactly the capacity shared pages are saving; admission gates on
+        ``outstanding_pages`` (new pages only), not on this total."""
         return sum(self._reserved)
+
+    @property
+    def outstanding_pages(self) -> int:
+        """New-page allocation rights still held by live reservations —
+        the quantity admission actually gates on: pinned + outstanding
+        can never exceed ``num_pages``."""
+        return sum(self._outstanding)
 
     def occupancy(self) -> float:
         return self.in_use / self.num_pages
@@ -104,9 +180,59 @@ class PagePool:
         return [int(p) for p in self.table[slot, :self._held[slot]]]
 
     # ------------------------------------------------------- allocation ----
+    def _alloc(self, slot: int) -> int:
+        """Take one page for ``slot``'s reservation: free list first, then
+        evict a refcount-0 cached page (admission accounting guarantees one
+        exists whenever outstanding rights remain)."""
+        if self._outstanding[slot] <= 0:
+            raise ValueError(
+                f"slot {slot}: allocation exceeds its new-page budget")
+        self._outstanding[slot] -= 1
+        if self._free:
+            return self._free.pop()
+        if self.evict == "fifo":
+            page = min(self._evictable, key=self._seq.__getitem__)
+            self._evictable.pop(page)
+        else:                              # lru: least recently released
+            page, _ = self._evictable.popitem(last=False)
+        del self._index[self._page_key[page]]
+        self._page_key[page] = None
+        self.evictions += 1
+        return page
+
+    def _match_prefix(self, tokens) -> list[int]:
+        """Longest run of cached pages covering ``tokens``' full pages."""
+        pages: list[int] = []
+        key = _CHAIN_ROOT
+        ps = self.page_size
+        for i in range(len(tokens) // ps):
+            key = _chain_key(key, tokens[i * ps:(i + 1) * ps])
+            page = self._index.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
     def reserve(self, slot: int, rows: int) -> bool:
         """Commit ``rows`` worst-case KV rows for ``slot``; False (and no
-        state change) when the pool cannot guarantee them."""
+        state change) when the pool cannot guarantee them. Cold path: no
+        prefix lookup — equivalent to ``reserve_prefix(slot, rows) is not
+        None``."""
+        return self.reserve_prefix(slot, rows) is not None
+
+    def reserve_prefix(self, slot: int, rows: int,
+                       tokens=None) -> int | None:
+        """Commit ``rows`` worst-case KV rows for ``slot``, attaching any
+        cached pages whose chain keys match ``tokens``' prompt prefix.
+
+        Returns the number of logical rows the slot may skip prefilling
+        (0 for a cold request), or None (no state change) when the pool
+        cannot guarantee the *new* pages. The skip never reaches the last
+        prompt token: the engine must re-score the final token to get the
+        logits that seed sampling, so a fully cached, page-aligned prompt
+        skips ``len(tokens) - 1`` rows and budgets ONE extra page for the
+        copy-on-write that 1-token tail re-score will trigger (it writes
+        into the shared last page)."""
         if self._reserved[slot]:
             raise ValueError(f"slot {slot} already holds a reservation")
         need = self.pages_for(rows)
@@ -114,11 +240,35 @@ class PagePool:
             raise ValueError(
                 f"slot {slot}: {rows} rows need {need} pages > "
                 f"max_pages_per_slot ({self.max_pages_per_slot})")
-        if sum(self._reserved) + need > self.num_pages:
-            return False
+        hits: list[int] = []
+        cow_budget = 0
+        if self.prefix_cache and tokens is not None and len(tokens) > 0:
+            hits = self._match_prefix(tokens)[:need]
+            if hits and len(hits) * self.page_size >= len(tokens):
+                cow_budget = 1             # tail re-score COWs the last page
+        # Attaching a hit pins it but consumes no *new* page; supply must
+        # cover this slot's new pages plus every other reservation's
+        # outstanding rights (they may all cash in before we release).
+        new_allocs = need - len(hits) + cow_budget
+        if new_allocs > self.free_pages - self.outstanding_pages:
+            return None
+        for i, page in enumerate(hits):
+            if self.refcount[page] == 0:
+                del self._evictable[page]
+            self.refcount[page] += 1
+            self.table[slot, i] = page
+        self._held[slot] = len(hits)
         self._reserved[slot] = need
+        self._outstanding[slot] = new_allocs
+        if hits:
+            self.version += 1
+            self.prefix_hit_rows += len(hits) * self.page_size
         self.peak_reserved = max(self.peak_reserved, self.reserved_pages)
-        return True
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        skip = len(hits) * self.page_size
+        if tokens is not None and skip:
+            skip = min(skip, len(tokens) - 1)
+        return skip
 
     def ensure(self, slot: int, rows: int) -> list[int]:
         """Map pages so logical rows [0, rows) of ``slot`` are backed;
@@ -130,7 +280,8 @@ class PagePool:
                 f"({self._reserved[slot]} pages)")
         new = []
         while self._held[slot] < need:
-            pid = self._free.pop()        # cannot fail: held <= reserved
+            pid = self._alloc(slot)
+            self.refcount[pid] = 1
             self.table[slot, self._held[slot]] = pid
             self._held[slot] += 1
             new.append(pid)
@@ -139,14 +290,125 @@ class PagePool:
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return new
 
+    def ensure_writable(self, slot: int, start: int,
+                        stop: int) -> tuple[list[int], list[tuple[int, int]]]:
+        """Back logical rows [0, stop) and make the write window [start,
+        stop) exclusively owned: any page in the window shared with other
+        slots (refcount > 1) is swapped for a freshly allocated private
+        page. Returns ``(new_page_ids, copies)`` where ``copies`` is the
+        [(src_page, dst_page)] device copies the caller must perform
+        BEFORE writing the window. Bumps ``version`` at most once."""
+        v0 = self.version
+        new = self.ensure(slot, stop)
+        copies: list[tuple[int, int]] = []
+        ps = self.page_size
+        for pi in range(start // ps, -(-stop // ps)):
+            page = int(self.table[slot, pi])
+            if self.refcount[page] > 1:
+                private = self._alloc(slot)
+                self.refcount[page] -= 1
+                self.refcount[private] = 1
+                self.table[slot, pi] = private
+                copies.append((page, private))
+                self.cow_copies += 1
+        if copies and self.version == v0:
+            self.version += 1
+        return new, copies
+
+    def commit_prefix(self, slot: int, tokens, filled: int) -> int:
+        """Register ``slot``'s prompt pages in the prefix cache: page i is
+        registered once rows [i*page_size, (i+1)*page_size) are prompt
+        tokens already written to the cache (``filled`` rows are). Chunk-
+        incremental and idempotent — the engine calls it after every
+        prefill chunk. Returns the number of newly registered pages."""
+        if not self.prefix_cache:
+            return 0
+        ps = self.page_size
+        n_full = min(filled, len(tokens)) // ps
+        key = _CHAIN_ROOT
+        new = 0
+        for i in range(min(n_full, self._held[slot])):
+            key = _chain_key(key, tokens[i * ps:(i + 1) * ps])
+            page = int(self.table[slot, i])
+            # Skip keys already registered (idempotence / another slot won
+            # the race) and pages already carrying a key (an attached hit).
+            if key in self._index or self._page_key[page] is not None:
+                continue
+            self._index[key] = page
+            self._page_key[page] = key
+            self._seqno += 1
+            self._seq[page] = self._seqno
+            new += 1
+        return new
+
+    def fork(self, src: int, dst: int, rows: int,
+             src_rows: int) -> list[tuple[int, int]] | None:
+        """Fork ``src``'s first ``src_rows`` KV rows into empty slot
+        ``dst`` with a fresh worst-case reservation of ``rows``: full
+        pages are shared (refcount++, lazily copy-on-write), a partially
+        filled tail page is copied eagerly (charged to ``dst``) so both
+        streams can append without a COW charged to ``src``'s budget.
+        Returns the [(src_page, dst_page)] device copies the caller must
+        perform, or None (no state change) when the pool cannot guarantee
+        the new pages. Building block for n>1 parallel sampling."""
+        if self._reserved[dst]:
+            raise ValueError(f"slot {dst} already holds a reservation")
+        need = self.pages_for(rows)
+        if need > self.max_pages_per_slot:
+            raise ValueError(
+                f"slot {dst}: {rows} rows need {need} pages > "
+                f"max_pages_per_slot ({self.max_pages_per_slot})")
+        held = self._held[src]
+        if self.pages_for(src_rows) != held:
+            raise ValueError(
+                f"fork: src slot {src} holds {held} pages but src_rows="
+                f"{src_rows} spans {self.pages_for(src_rows)}")
+        if need < held:
+            raise ValueError(f"fork: rows ({rows}) below src fill "
+                             f"({src_rows})")
+        shared = min(src_rows // self.page_size, held)
+        new_allocs = need - shared
+        if new_allocs > self.free_pages - self.outstanding_pages:
+            return None
+        self._reserved[dst] = need
+        self._outstanding[dst] = new_allocs
+        for i in range(shared):
+            page = int(self.table[src, i])
+            self.refcount[page] += 1
+            self.table[dst, i] = page
+        self._held[dst] = shared
+        copies: list[tuple[int, int]] = []
+        for i in range(shared, held):      # the partial tail page, if any
+            private = self._alloc(dst)
+            self.refcount[private] = 1
+            self.table[dst, i] = private
+            self._held[dst] = i + 1
+            copies.append((int(self.table[src, i]), private))
+        if self._held[dst]:
+            self.version += 1
+        self.peak_reserved = max(self.peak_reserved, self.reserved_pages)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return copies
+
     def release(self, slot: int) -> list[int]:
-        """Return every page ``slot`` holds to the free list and drop its
-        reservation; returns the released page ids."""
+        """Drop every page reference ``slot`` holds and its reservation;
+        returns the page ids dereferenced. A page whose refcount drops to
+        0 returns to the free list — or, when registered in the prefix
+        cache, parks on the evictable list with its K/V intact, ready to
+        be attached by a later request with the same prefix. ONE version
+        bump per call, however many pages move."""
         pages = self.owned(slot)
-        self._free.extend(pages)
+        for page in pages:
+            self.refcount[page] -= 1
+            if self.refcount[page] == 0:
+                if self._page_key[page] is not None:
+                    self._evictable[page] = self._page_key[page]
+                else:
+                    self._free.append(page)
         self.table[slot, :] = -1
         self._held[slot] = 0
         self._reserved[slot] = 0
+        self._outstanding[slot] = 0
         if pages:
             self.version += 1
         return pages
@@ -171,6 +433,8 @@ class SlotState:
     generated: list = field(default_factory=list)
     filled: int = 0                       # prompt tokens prefilled so far
     phase: str = PREFILLING
+    prefix_cached: int = 0                # rows admitted from the prefix
+                                          # cache (filled starts here)
 
     @property
     def last_token(self) -> int:
@@ -191,7 +455,10 @@ class Scheduler:
     With a ``page_pool`` (paged KV serving), admission additionally requires
     a worst-case page reservation — a request stays queued (FIFO order
     preserved) until the pool can guarantee prompt + token-budget rows — and
-    ``finish`` releases every page the slot held."""
+    ``finish`` releases every page the slot held. ``submit`` rejects a
+    request whose worst-case reservation could NEVER be satisfied (more
+    pages than the pool holds, or than one slot may map): such a request
+    would otherwise park at the FIFO head failing ``reserve`` forever."""
 
     def __init__(self, max_slots: int, max_seq: int,
                  page_pool: PagePool | None = None):
@@ -212,6 +479,17 @@ class Scheduler:
             raise ValueError(
                 f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
                 f"exceeds max_seq ({self.max_seq})")
+        if self.page_pool is not None:
+            pool = self.page_pool
+            need = pool.pages_for(len(prompt) + max_new_tokens)
+            cap = min(pool.num_pages, pool.max_pages_per_slot)
+            if need > cap:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + max_new_tokens "
+                    f"({max_new_tokens}) needs {need} pages, beyond pool "
+                    f"capacity ({pool.num_pages} pages, "
+                    f"{pool.max_pages_per_slot} per slot) — the request "
+                    f"could never be admitted")
         uid = next(self._uids)
         self.queue.append(Request(uid, prompt, max_new_tokens, eos_id,
                                   sampling))
@@ -225,16 +503,24 @@ class Scheduler:
 
     def admit(self) -> tuple[int, Request] | None:
         """Pop the next queued request into a free slot (PREFILLING state),
-        if both exist."""
+        if both exist. With a page pool, a request whose prompt prefix is
+        cached admits *warm*: its slot's table rows point at the shared
+        pages and ``filled`` starts past them, so prefill begins at the
+        first uncached row."""
         slot = self.free_slot()
         if slot is None or not self.queue:
             return None
         req = self.queue[0]
-        if self.page_pool is not None and not self.page_pool.reserve(
-                slot, len(req.prompt) + req.max_new_tokens):
-            return None                   # pool full: request stays queued
+        skip = 0
+        if self.page_pool is not None:
+            skip = self.page_pool.reserve_prefix(
+                slot, len(req.prompt) + req.max_new_tokens, req.prompt)
+            if skip is None:
+                return None               # pool full: request stays queued
         self.queue.popleft()
-        self.slots[slot] = SlotState(req)
+        state = SlotState(req)
+        state.filled = state.prefix_cached = skip
+        self.slots[slot] = state
         return slot, req
 
     # --------------------------------------------------------- prefill ----

@@ -3,12 +3,21 @@ one-compiled-shape guarantee, and ServeConfig construction-time validation.
 
 * PagePool property tests (hypothesis when available, plus an
   always-on seeded random walk): under arbitrary admit/extend/finish
-  sequences no page is ever owned by two slots, free + owned pages always
-  sum to ``num_pages``, and a finished slot returns every page it held.
+  sequences — cold (``_drive``) and prefix-sharing (``_drive_prefix``,
+  warm admissions, copy-on-write extends, cache commits) — every page's
+  refcount equals the number of slot table rows mapping it, free +
+  evictable + pinned pages partition the pool (so no page is freed or
+  evicted while referenced, and the refcounts of free pages sum to 0), a
+  slot never maps more pages than its reservation, a finished slot
+  dereferences every page it held, and ``version`` increases
+  monotonically with at most one bump per mutating call.
 * Paged engine output is bit-identical to the contiguous engine AND to solo
   decode on the qwen2/gemma2/grok smoke configs — GQA, local-window,
   softcap, the paged split-KV kernel, multi-chunk ragged admissions, and a
   pool small enough that admission has to wait for released pages.
+* Warm-vs-cold A/B: the same traffic served with the prefix cache on and
+  off emits bit-identical token streams on qwen2/gemma2, while the warm
+  engine computes strictly fewer prefill tokens.
 * Trace counts for the paged prefill and decode steps stay at 1 across an
   engine lifetime of mixed-length traffic (the page table is a value, not
   a shape).
@@ -28,6 +37,7 @@ from repro.configs.registry import get_config
 from repro.models import transformer as T
 from repro.nn.module import Ctx
 from repro.serve.engine import ContinuousBatchingEngine, ServeSession
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import PagePool
 
 try:
@@ -39,16 +49,37 @@ except ImportError:                                   # bare env: seeded walk
 
 # ------------------------------------------------- allocator invariants ----
 def _check_invariants(pool: PagePool, num_pages: int, max_slots: int):
-    """The three properties the page pool must never violate."""
+    """The properties the refcounted page pool must never violate."""
     owned = [pool.owned(s) for s in range(max_slots)]
     flat = [p for o in owned for p in o]
-    assert len(flat) == len(set(flat)), f"page owned twice: {owned}"
     assert all(0 <= p < num_pages for p in flat)
-    assert pool.free_pages + len(flat) == num_pages, (
-        f"leak: {pool.free_pages} free + {len(flat)} owned != {num_pages}")
+    # refcount[p] == number of slot table rows mapping p
+    counts: dict[int, int] = {}
+    for p in flat:
+        counts[p] = counts.get(p, 0) + 1
+    for p in range(num_pages):
+        assert pool.refcount[p] == counts.get(p, 0), (
+            f"page {p}: refcount {pool.refcount[p]} != "
+            f"{counts.get(p, 0)} mapping rows")
+    # free, evictable and pinned pages partition the pool — no page is on
+    # the free/evictable lists while any slot references it, and the
+    # refcounts of allocatable pages sum to 0
+    free, evictable = set(pool._free), set(pool._evictable)
+    assert not free & evictable
+    assert not (free | evictable) & set(flat)
+    assert sum(pool.refcount[p] for p in free | evictable) == 0
+    assert len(free) + len(evictable) + len(set(flat)) == num_pages, (
+        f"leak: {len(free)} free + {len(evictable)} evictable + "
+        f"{len(set(flat))} pinned != {num_pages}")
+    assert pool.free_pages == len(free) + len(evictable)
     for s, o in enumerate(owned):
         table_row = [int(p) for p in pool.table[s] if p >= 0]
         assert table_row == o, f"table/owned mismatch for slot {s}"
+        # a slot never maps more pages than its reservation — warm
+        # admissions included
+        assert len(o) <= pool._reserved[s], (
+            f"slot {s} maps {len(o)} pages > reservation "
+            f"{pool._reserved[s]}")
 
 
 def _drive(pool: PagePool, num_pages: int, max_slots: int, page_size: int,
@@ -60,8 +91,10 @@ def _drive(pool: PagePool, num_pages: int, max_slots: int, page_size: int,
     max_rows = pool.max_pages_per_slot * page_size
     reserved_rows = [0] * max_slots                   # our model of the pool
     backed_rows = [0] * max_slots
+    last_version = pool.version
     for kind, slot, amount in ops:
         slot %= max_slots
+        v0 = pool.version
         if kind == 0 and not reserved_rows[slot]:
             rows = 1 + amount % max_rows
             if pool.reserve(slot, rows):
@@ -77,8 +110,73 @@ def _drive(pool: PagePool, num_pages: int, max_slots: int, page_size: int,
             released = set(pool.release(slot))
             assert released == held, "finished slot kept pages"
             assert not pool.owned(slot)
+            assert pool.version - v0 <= 1, "release must batch its bump"
             reserved_rows[slot] = backed_rows[slot] = 0
         _check_invariants(pool, num_pages, max_slots)
+        assert pool.version >= last_version, "version went backwards"
+        assert pool.version - v0 <= 1, "more than one bump per call"
+        last_version = pool.version
+
+
+def _shared_prompt(n: int) -> list[int]:
+    # one deterministic token stream all prefix-driver prompts prefix —
+    # maximizing cache hits across the op sequence
+    return [(7 * i + 3) % 997 for i in range(n)]
+
+
+def _drive_prefix(pool: PagePool, num_pages: int, max_slots: int,
+                  page_size: int, ops: list[tuple[int, int, int]]):
+    """Engine-shaped op interpreter with prefix-cache admissions: prompts
+    are prefixes of one shared stream (so admissions hit cached pages),
+    extends go through ``ensure_writable`` + ``commit_prefix`` exactly like
+    ``ContinuousBatchingEngine._prefill_one``, finishes release. Checks the
+    refcount invariants, COW exclusivity of every write window, and
+    version monotonicity after every op."""
+    max_rows = pool.max_pages_per_slot * page_size
+    prompt: list = [None] * max_slots
+    reserved_rows = [0] * max_slots
+    fill = [0] * max_slots
+    last_version = pool.version
+    for kind, slot, amount in ops:
+        slot %= max_slots
+        v0 = pool.version
+        if kind == 0 and not reserved_rows[slot]:
+            rows = 1 + amount % max_rows
+            plen = max(1, rows - rows // 4)           # prompt + decode budget
+            tokens = _shared_prompt(plen)
+            skip = pool.reserve_prefix(slot, rows, tokens)
+            if skip is not None:
+                assert 0 <= skip <= max(0, plen - 1)
+                assert len(pool.owned(slot)) * page_size >= skip
+                reserved_rows[slot], prompt[slot] = rows, tokens
+                fill[slot] = skip
+        elif kind == 1 and reserved_rows[slot]:
+            stop = min(fill[slot] + 1 + amount % (2 * page_size),
+                       reserved_rows[slot])
+            if stop > fill[slot]:
+                pool.ensure_writable(slot, fill[slot], stop)
+                # COW contract: after ensure_writable the whole write
+                # window is exclusively owned
+                for pi in range(fill[slot] // page_size,
+                                -(-stop // page_size)):
+                    page = int(pool.table[slot, pi])
+                    assert pool.refcount[page] == 1, (
+                        f"write window page {page} still shared")
+                pool.commit_prefix(slot, prompt[slot],
+                                   min(stop, len(prompt[slot])))
+                fill[slot] = stop
+        elif kind == 2 and reserved_rows[slot]:
+            held = pool.owned(slot)
+            released = pool.release(slot)
+            assert released == held, "finished slot kept references"
+            assert not pool.owned(slot)
+            assert pool.version - v0 <= 1, "release must batch its bump"
+            reserved_rows[slot] = fill[slot] = 0
+            prompt[slot] = None
+        _check_invariants(pool, num_pages, max_slots)
+        assert pool.version >= last_version, "version went backwards"
+        assert pool.version - v0 <= 1, "more than one bump per op"
+        last_version = pool.version
 
 
 def test_page_pool_random_walk_keeps_invariants():
@@ -107,6 +205,37 @@ if HAVE_HYPOTHESIS:
             st.tuples(st.integers(0, 2), st.integers(0, max_slots - 1),
                       st.integers(0, 64)), max_size=60), label="ops")
         _drive(pool, num_pages, max_slots, page_size, ops)
+
+
+def test_page_pool_prefix_random_walk_keeps_invariants():
+    """Seeded walk over the prefix-sharing op set (warm admissions, COW
+    extends, cache commits, evictions under pressure) — exercised even
+    without hypothesis."""
+    rng = pyrandom.Random(1)
+    for trial in range(20):
+        num_pages = rng.randint(2, 24)
+        max_slots = rng.randint(1, 6)
+        page_size = rng.choice([1, 2, 4, 8])
+        mpps = rng.randint(1, max(1, num_pages))
+        pool = PagePool(num_pages, page_size, max_slots, mpps,
+                        evict=rng.choice(["lru", "fifo"]))
+        ops = [(rng.randint(0, 2), rng.randint(0, max_slots - 1),
+                rng.randint(0, 64)) for _ in range(rng.randint(1, 60))]
+        _drive_prefix(pool, num_pages, max_slots, page_size, ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(2, 24), st.integers(1, 6), st.sampled_from([1, 2, 4]),
+           st.sampled_from(["lru", "fifo"]), st.data())
+    def test_page_pool_property_prefix_sharing_refcounts(
+            num_pages, max_slots, page_size, evict, data):
+        mpps = data.draw(st.integers(1, num_pages), label="max_pages_per_slot")
+        pool = PagePool(num_pages, page_size, max_slots, mpps, evict=evict)
+        ops = data.draw(st.lists(
+            st.tuples(st.integers(0, 2), st.integers(0, max_slots - 1),
+                      st.integers(0, 64)), max_size=60), label="ops")
+        _drive_prefix(pool, num_pages, max_slots, page_size, ops)
 
 
 def test_page_pool_version_bumps_only_on_table_mutation():
@@ -229,6 +358,46 @@ def test_paged_engine_pool_pressure_serializes_but_serves_all():
     assert sorted(results) == sorted(uids)
     assert all(len(results[u]) == 3 for u in uids)
     assert eng.pool.free_pages == 4
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma2-2b"])
+def test_warm_vs_cold_streams_bit_identical(arch):
+    """Prefix cache on/off A/B on the smoke archs: the same traffic —
+    a shared prefix re-served under several suffixes, including a fully
+    cached page-aligned re-serve (the 1-token tail re-score path) — must
+    emit bit-identical token streams, while the warm engine computes
+    exactly the uncached suffix tokens. Sampling is stochastic: per-slot
+    keys fold the cache *position*, so skipping cached rows cannot shift
+    a stream."""
+    cfg, p = _model(arch)
+    shared = _prompts(cfg, [12], seed=77)[0]          # 3 pages of 4, aligned
+    tails = _prompts(cfg, [7, 4, 12], seed=80)
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=123)
+
+    def serve(prefix_cache):
+        scfg = ServeConfig(max_seq=48, prefill_chunk=4, max_slots=1,
+                           paged_kv=True, page_size=4, num_pages=24,
+                           prefix_cache=prefix_cache)
+        eng = ContinuousBatchingEngine(cfg, scfg, p, default_sampling=sp)
+        uids = [eng.submit(shared, 4)]                # cold: seeds the cache
+        uids += [eng.submit(shared + t, 4) for t in tails]
+        uids.append(eng.submit(shared, 4))            # fully cached re-serve
+        results = eng.run(max_steps=600)
+        assert sorted(results) == sorted(uids)
+        return [results[u] for u in uids], eng
+
+    warm, weng = serve(True)
+    cold, ceng = serve(False)
+    assert warm == cold
+    # cold computes every prompt token; warm only the uncached suffixes
+    # plus the fully-cached request's 1-token tail re-score
+    assert ceng.prefilled_tokens == 12 + 19 + 16 + 24 + 12
+    assert weng.prefilled_tokens == 12 + 7 + 4 + 12 + 1
+    assert weng.pool.prefix_hit_rows > 0
+    assert ceng.pool.prefix_hit_rows == 0
+    # all references dropped after drain; cached pages stay allocatable
+    assert weng.pool.free_pages == 24
+    assert weng.pool.cached_pages > 0
 
 
 # ------------------------------------------------- construction checks ----
