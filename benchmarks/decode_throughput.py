@@ -37,6 +37,13 @@ Four measurements:
   after the first skips the shared rows' prefill entirely. Throughput
   counts *submitted* prompt tokens, so the warm speedup is user-visible
   tok/s, not an internal accounting trick.
+* **kv_bytes** (every mode) — the quantized-KV claim: static cache bytes
+  per resident token for bf16 vs int8 (per-row fp32 scale leaves counted
+  against the int8 side), with the bf16/int8 ratio **asserted >= 1.5x**,
+  plus one decode step and engine tok/s on each cache dtype with the
+  split-KV kernel on — the in-VMEM dequant path vs the bf16 baseline on
+  identical work. In ``--paged`` the ``long_500k`` step also runs on an
+  int8 pool (``long_500k_step_us_int8``).
 
 Besides the CSV rows on stdout, the run writes ``BENCH_serve.json``
 (``--json-out``) — decode tok/s (fused and host-sampling), prefill tok/s,
@@ -66,6 +73,7 @@ from benchmarks.common import bench_wall, emit
 from repro.analysis.trace_guard import TraceGuard
 from repro.configs.base import SHAPES, ServeConfig
 from repro.configs.registry import get_config
+from repro.kernels import cache_layout as CL
 from repro.models import transformer as T
 from repro.nn.module import Ctx
 from repro.serve import sampling as S
@@ -108,7 +116,7 @@ def _static_toks_per_s(cfg, params, reqs, max_seq):
 
 
 def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
-                           paged=False, fused=True):
+                           paged=False, fused=True, kv_dtype="bfloat16"):
     """``fused=False`` serves with the legacy host-sampling steps (logits
     shipped to the host per token) — the A/B baseline for the fused
     in-step epilogue."""
@@ -118,7 +126,7 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
                        decode_kernel=decode_kernel, paged_kv=paged,
                        page_size=8 if paged else 256, fused_sampling=fused,
-                       prefix_cache=False)
+                       prefix_cache=False, kv_cache_dtype=kv_dtype)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     # the analysis-layer trace guard replaces the old ad-hoc cache_size
     # asserts: the whole benchmark workload — ragged admissions, decode,
@@ -196,7 +204,7 @@ def _pin_index(caches, value, slot=None):
 
 
 def _step_us(cfg, params, batch, cache_len, decode_kernel, fused=False,
-             fill=None, fill_bound=True):
+             fill=None, fill_bound=True, kv_dtype="bfloat16"):
     """One jitted decode step at a pinned cache length. ``fused=True``
     measures the production token-emitting step (sampling epilogue inside,
     (batch,) int32 out); ``fused=False`` the legacy logits-returning step —
@@ -206,7 +214,8 @@ def _step_us(cfg, params, batch, cache_len, decode_kernel, fused=False,
     capacity-sized KV grid regardless of fill — the A/B pair behind the
     ``decode_step_fill_us`` rows."""
     scfg = ServeConfig(max_seq=cache_len, decode_kernel=decode_kernel,
-                       fused_sampling=fused, fill_bound=fill_bound)
+                       fused_sampling=fused, fill_bound=fill_bound,
+                       kv_cache_dtype=kv_dtype)
     init_caches, _, decode_step, _ = make_serve_fns(cfg, scfg)
     caches = _pin_index(init_caches(batch),
                         (cache_len if fill is None else fill) - 1)
@@ -224,40 +233,97 @@ def _paged_long_step(cfg, params, rows, report):
     """One decode step of the long_500k shape against a page pool that holds
     FEWER total KV cells than the contiguous max_slots x max_seq block —
     the acceptance shape of the paged design. Slot 0 sits at full 500k
-    context; the other slots are idle, holding zero pages."""
+    context; the other slots are idle, holding zero pages. Runs twice, on
+    a bf16 and an int8 cache: long context is exactly where the quantized
+    pool's smaller resident bytes matter, so the A/B is part of the
+    artifact (``long_500k_step_us`` vs ``long_500k_step_us_int8``)."""
     L, _, _ = SHAPES["long_500k"]
     max_slots, page_size = 4, 1024
     num_pages = -(-L // page_size) + 8                     # thin headroom
-    # legacy logits step: this cell measures the (batch, vocab) surface
-    scfg = ServeConfig(max_seq=L, max_slots=max_slots, paged_kv=True,
-                       page_size=page_size, num_pages=num_pages,
-                       fused_sampling=False)
     total_cells = num_pages * page_size
     contiguous_cells = max_slots * L
     assert total_cells < contiguous_cells, (total_cells, contiguous_cells)
-
-    kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
-    caches = T.init_paged_caches(cfg, max_slots, num_pages, page_size,
-                                 kv_dtype=kv_dtype)
-    caches = tree_map_with_path(
-        lambda p, a: a.at[:, 0].set(L - 1)
-        if getattr(p[-1], "key", None) == "index" else a, caches)
-    table = np.full((max_slots, scfg.max_pages_per_slot), -1, np.int32)
-    table[0, :] = np.arange(scfg.max_pages_per_slot)
+    table = np.full((max_slots, -(-L // page_size)), -1, np.int32)
+    table[0, :] = np.arange(-(-L // page_size))
     active = np.zeros((max_slots,), bool)
     active[0] = True
-    toks = jnp.zeros((max_slots, 1), jnp.int32)
-    inputs = {"tokens": toks, "active": jnp.asarray(active),
+    inputs = {"tokens": jnp.zeros((max_slots, 1), jnp.int32),
+              "active": jnp.asarray(active),
               "page_table": jnp.asarray(table)}
-    _, _, decode_step, _ = make_serve_fns(cfg, scfg)
-    us = bench_wall(jax.jit(decode_step), params, caches, inputs,
-                    iters=2, warmup=1)
-    rows.append(("serve/paged_long500k_step_us", f"{us:.0f}",
-                 f"cells={total_cells};contiguous={contiguous_cells};"
-                 f"saving={1 - total_cells/contiguous_cells:.2%}"))
-    report["long_500k_step_us"] = us
+    for suffix, dt in (("", "bfloat16"), ("_int8", "int8")):
+        # legacy logits step: this cell measures the (batch, vocab) surface
+        scfg = ServeConfig(max_seq=L, max_slots=max_slots, paged_kv=True,
+                           page_size=page_size, num_pages=num_pages,
+                           fused_sampling=False, kv_cache_dtype=dt)
+        caches = T.init_paged_caches(cfg, max_slots, num_pages, page_size,
+                                     kv_dtype=CL.kv_cache_dtype(dt))
+        caches = tree_map_with_path(
+            lambda p, a: a.at[:, 0].set(L - 1)
+            if getattr(p[-1], "key", None) == "index" else a, caches)
+        _, _, decode_step, _ = make_serve_fns(cfg, scfg)
+        us = bench_wall(jax.jit(decode_step), params, caches, inputs,
+                        iters=2, warmup=1)
+        rows.append((f"serve/paged_long500k_step{suffix}_us", f"{us:.0f}",
+                     f"cells={total_cells};contiguous={contiguous_cells};"
+                     f"saving={1 - total_cells/contiguous_cells:.2%}"))
+        report[f"long_500k_step_us{suffix}"] = us
     report["long_500k_cells"] = {"paged": total_cells,
                                  "contiguous": contiguous_cells}
+
+
+def _kv_bytes_per_token(cfg, kv_dtype, batch=8, max_seq=4096):
+    """Static cache bytes per resident token: every non-``index`` leaf of
+    the contiguous cache tree — K/V data plus, in quantized modes, the
+    per-row fp32 ``k_scale``/``v_scale`` leaves — over batch * max_seq
+    token slots. Counted from the real ``init_caches`` tree, not a formula,
+    so a layout change (extra leaves, wider scales) shows up here."""
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, batch, max_seq,
+                              kv_dtype=CL.kv_cache_dtype(kv_dtype)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(caches)
+    total = sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                for path, leaf in flat
+                if getattr(path[-1], "key", "") != "index")
+    return total / (batch * max_seq)
+
+
+def _kv_bytes_rows(cfg, params, rows, report):
+    """The quantized-KV HBM claim, measured two ways: static cache bytes
+    per resident token (bf16 vs int8, scale rows included) and the same
+    decode workload served from both cache dtypes with the split-KV kernel
+    on. The byte ratio is asserted >= 1.5x — the acceptance bar for the
+    int8 mode: a layout regression that silently fattens the quantized
+    cache (say, per-row scales becoming per-element) fails the benchmark
+    run instead of shipping a thinner win."""
+    per = {}
+    for name, dt in (("bf16", "bfloat16"), ("int8", "int8")):
+        bpt = _kv_bytes_per_token(cfg, dt)
+        per[name] = bpt
+        rows.append((f"serve/kv_bytes_per_token_{name}", f"{bpt:.1f}",
+                     "cache_bytes_per_resident_token;scales_included"))
+        report["kv_bytes"][f"per_token_{name}"] = bpt
+    ratio = per["bf16"] / per["int8"]
+    assert ratio >= 1.5, (
+        f"int8 KV cache holds only {ratio:.2f}x fewer bytes per resident "
+        "token than bf16 (acceptance bar: >= 1.5x) — the quantized layout "
+        "or its scale rows regressed")
+    rows.append(("serve/kv_bytes_ratio", f"{ratio:.2f}x",
+                 "bf16_over_int8;acceptance>=1.5x"))
+    report["kv_bytes"]["ratio_bf16_over_int8"] = ratio
+    # the same decode work on each cache dtype, split-KV kernel on: one
+    # jitted step at a pinned fill (the in-VMEM dequant's device cost) and
+    # engine tok/s on a shared queue (the end-to-end serving surface)
+    reqs = _workload(random.key(11), 4, cfg.vocab_size)
+    for name, dt in (("bf16", "bfloat16"), ("int8", "int8")):
+        us = _step_us(cfg, params, 8, 1024, True, kv_dtype=dt)
+        tps, _, _ = _continuous_toks_per_s(cfg, params, reqs, 48, 4, True,
+                                           kv_dtype=dt)
+        rows.append((f"serve/kv_{name}_step_L1024_b8_us", f"{us:.0f}",
+                     "splitkv;interpret_on_cpu"))
+        rows.append((f"serve/kv_{name}_decode_tok_s", f"{tps:.1f}",
+                     "continuous;decode_kernel"))
+        report["kv_bytes"][f"step_L1024_b8_{name}_us"] = us
+        report["kv_bytes"][f"decode_tok_s_{name}"] = tps
 
 
 def _prefix_share_rows(cfg, params, rows, report):
@@ -323,7 +389,8 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
     for key, typ in (("arch", str), ("mode", str), ("paged", bool),
                      ("decode_tok_s", dict), ("prefill_tok_s", dict),
                      ("decode_step_us", dict), ("decode_step_fill_us", dict),
-                     ("page_occupancy", dict), ("prefix_share", dict)):
+                     ("page_occupancy", dict), ("prefix_share", dict),
+                     ("kv_bytes", dict)):
         assert isinstance(report.get(key), typ), (
             f"BENCH_serve.json schema: missing/mistyped {key!r}")
     num = (int, float)
@@ -362,9 +429,18 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
                 f"BENCH_serve.json schema: decode_step_fill_us[{k!r}] "
                 "missing — the fill-bounded vs capacity-swept A/B is part "
                 "of the artifact")
+    # quantized-KV rows run in every mode: the byte ratio is the acceptance
+    # claim of the int8 cache, so the artifact must always carry the family
+    for k in ("per_token_bf16", "per_token_int8", "ratio_bf16_over_int8",
+              "step_L1024_b8_bf16_us", "step_L1024_b8_int8_us",
+              "decode_tok_s_bf16", "decode_tok_s_int8"):
+        assert isinstance(report["kv_bytes"].get(k), num), (
+            f"BENCH_serve.json schema: kv_bytes[{k!r}] missing — the "
+            "bf16-vs-int8 cache A/B is part of the artifact")
     if paged:
-        assert isinstance(report.get("long_500k_step_us"), num), (
-            "BENCH_serve.json schema: long_500k_step_us missing in --paged")
+        for k in ("long_500k_step_us", "long_500k_step_us_int8"):
+            assert isinstance(report.get(k), num), (
+                f"BENCH_serve.json schema: {k} missing in --paged")
         for n in batches:
             for k in (f"engine_b{n}_peak", f"engine_b{n}_peak_reserved"):
                 assert isinstance(report["page_occupancy"].get(k), num), (
@@ -379,7 +455,7 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
     report = {"arch": arch, "mode": "full" if full else "quick",
               "paged": paged, "decode_tok_s": {}, "prefill_tok_s": {},
               "decode_step_us": {}, "decode_step_fill_us": {},
-              "page_occupancy": {}, "prefix_share": {},
+              "page_occupancy": {}, "prefix_share": {}, "kv_bytes": {},
               "long_500k_step_us": None}
 
     # ---- engine: static vs continuous on the same request queue ----
@@ -478,6 +554,9 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
         report["decode_step_fill_us"][f"L{FL}_b{FB}_fill{frac}_bounded"] = bnd
         report["decode_step_fill_us"][f"L{FL}_b{FB}_fill{frac}_speedup"] = (
             cap / bnd)
+
+    # ---- kv bytes: quantized vs bf16 cache, bytes + same-work latency ----
+    _kv_bytes_rows(cfg, params, rows, report)
 
     # ---- paged: the long_500k shape on a sub-contiguous page pool ----
     if paged:

@@ -28,6 +28,10 @@ The concrete rules encode the serving-path contract:
 * ``cache-dtype-stability`` — every cache leaf must come out of a step
   with the dtype it went in with: an accidental upcast doubles KV HBM, a
   downcast silently re-quantizes the cache each step.
+* ``quant-scale-contract`` — quantized-KV scale leaves stay fp32 across a
+  step, and no cache-sized *widening* convert materializes in HBM: the
+  whole point of an int8/fp8 cache is that dequantization happens
+  per-block in VMEM, never as a full-cache fp32/bf16 copy.
 """
 from __future__ import annotations
 
@@ -153,13 +157,18 @@ class StepTarget:
     disables the vocab rule (the legacy logits steps return vocab-sized
     logits on purpose). ``cache_in`` / ``cache_out`` — flat, same-order
     cache leaf avals entering and leaving the step (anything with
-    ``.shape``/``.dtype``); empty disables the dtype-stability rule."""
+    ``.shape``/``.dtype``); empty disables the dtype-stability rule.
+    ``scale_leaves`` — indices into ``cache_in``/``cache_out`` naming the
+    quantization-scale leaves of a quantized KV cache; empty disables the
+    scale half of the quant-scale rule (the widening-convert half still
+    runs whenever ``cache_cells`` is set)."""
     name: str
     jaxpr: ClosedJaxpr
     cache_cells: int | None = None
     vocab_size: int | None = None
     cache_in: tuple = ()
     cache_out: tuple = ()
+    scale_leaves: tuple = ()
 
 
 # ---------------------------------------------------------------- rules ----
@@ -239,8 +248,56 @@ class CacheDtypeStability:
         return found
 
 
+@dataclass(frozen=True)
+class QuantScaleContract:
+    name = "quant-scale-contract"
+    doc = ("quantized-KV scale leaves stay fp32 across a step and no "
+           "cache-sized widening convert (a dequantized full-cache copy) "
+           "materializes in HBM")
+
+    def check(self, t: StepTarget) -> list[Finding]:
+        found = []
+        f32 = np.dtype(np.float32)
+        for i in t.scale_leaves:
+            if i >= len(t.cache_in) or i >= len(t.cache_out):
+                continue
+            for side, leaf in (("in", t.cache_in[i]),
+                               ("out", t.cache_out[i])):
+                if np.dtype(leaf.dtype) != f32:
+                    found.append(Finding(
+                        self.name, t.name,
+                        f"scale leaf {i} {tuple(leaf.shape)} is "
+                        f"{leaf.dtype} on the way {side} (must stay "
+                        "float32: scales set the dequant precision)",
+                        (i, side, str(np.dtype(leaf.dtype)))))
+        if t.cache_cells:
+            skip = frozenset({"pallas_call"})
+            for eqn in iter_eqns(t.jaxpr, skip_into=skip):
+                if eqn.primitive.name != "convert_element_type":
+                    continue
+                if not eqn.invars or not eqn.outvars:
+                    continue
+                src = getattr(eqn.invars[0], "aval", None)
+                dst = getattr(eqn.outvars[0], "aval", None)
+                if src is None or dst is None:
+                    continue
+                if (_aval_elems(src) >= t.cache_cells
+                        and np.dtype(dst.dtype).itemsize
+                        > np.dtype(src.dtype).itemsize):
+                    found.append(Finding(
+                        self.name, t.name,
+                        f"cache-sized widening convert {tuple(src.shape)} "
+                        f"{src.dtype} -> {dst.dtype}: a dequantized "
+                        "full-cache copy materialized in HBM (dequant "
+                        "belongs per-block in VMEM)",
+                        (tuple(src.shape), str(np.dtype(src.dtype)),
+                         str(np.dtype(dst.dtype)))))
+        return found
+
+
 DEFAULT_RULES = (NoCacheSizedLayoutOps(), NoVocabSizedOutputs(),
-                 NoHostCallbacks(), CacheDtypeStability())
+                 NoHostCallbacks(), CacheDtypeStability(),
+                 QuantScaleContract())
 
 
 def run_rules(target: StepTarget, rules=DEFAULT_RULES) -> list[Finding]:

@@ -44,6 +44,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.analysis.jaxpr_lint import Finding
+from repro.kernels import cache_layout as CL
 
 VMEM_BUDGET_BYTES = 16 << 20     # per-core VMEM on current TPU generations
 BLOCK_CAP_BYTES = 2 << 20        # per-operand block cap (decode _fold_factor
@@ -357,40 +358,47 @@ def serving_launches(cfg, scfg) -> dict[str, KernelLaunch]:
         launch.name = label
         out[label] = launch
 
+    kv_dtype = CL.kv_cache_dtype(scfg.kv_cache_dtype)
+    quant = CL.kv_quantized(kv_dtype)
     if scfg.paged_kv:
         ps, P = scfg.page_size, scfg.num_pages
         npg = scfg.max_pages_per_slot
-        pool = jnp.zeros((P, ps, hkv, d), jnp.dtype(scfg.kv_cache_dtype))
+        pool = jnp.zeros((P, ps, hkv, d), kv_dtype)
+        spool = jnp.ones((P, ps, hkv), jnp.float32) if quant else None
         table = (jnp.arange(b * npg, dtype=jnp.int32) % P).reshape(b, npg)
         with capture_launches() as caught:
             consmax_decode_paged(
                 jnp.zeros((b, H, d)), pool, pool, table,
                 jnp.full((b,), L, jnp.int32), beta, gamma, window=window,
-                softcap=softcap, fill_bound=scfg.fill_bound)
+                softcap=softcap, fill_bound=scfg.fill_bound,
+                k_scale=spool, v_scale=spool)
         grab("decode_paged", caught)
         with capture_launches() as caught:
             consmax_prefill_paged(
                 jnp.zeros((1, c, H, d)), pool, pool, table[:1],
                 jnp.full((1,), L - c, jnp.int32),
                 jnp.full((1,), c, jnp.int32), beta, gamma, window=window,
-                softcap=softcap, fill_bound=scfg.fill_bound)
+                softcap=softcap, fill_bound=scfg.fill_bound,
+                k_scale=spool, v_scale=spool)
         grab("prefill_paged", caught)
     else:
-        cache = jnp.zeros((b, L, hkv, d), jnp.dtype(scfg.kv_cache_dtype))
+        cache = jnp.zeros((b, L, hkv, d), kv_dtype)
+        scale = jnp.ones((b, L, hkv), jnp.float32) if quant else None
         with capture_launches() as caught:
             consmax_decode(
                 jnp.zeros((b, H, d)), cache, cache,
                 jnp.full((b,), L, jnp.int32), beta, gamma, window=window,
                 softcap=softcap, bk=scfg.decode_kv_block,
-                fill_bound=scfg.fill_bound)
+                fill_bound=scfg.fill_bound, k_scale=scale, v_scale=scale)
         grab("decode_contiguous", caught)
-        slot = jnp.zeros((1, L, hkv, d), jnp.dtype(scfg.kv_cache_dtype))
+        slot = jnp.zeros((1, L, hkv, d), kv_dtype)
+        sslot = jnp.ones((1, L, hkv), jnp.float32) if quant else None
         with capture_launches() as caught:
             consmax_prefill(
                 jnp.zeros((1, c, H, d)), slot, slot,
                 jnp.full((1,), L - c, jnp.int32),
                 jnp.full((1,), c, jnp.int32), beta, gamma, window=window,
                 softcap=softcap, bk=scfg.prefill_kv_block,
-                fill_bound=scfg.fill_bound)
+                fill_bound=scfg.fill_bound, k_scale=sslot, v_scale=sslot)
         grab("prefill_contiguous", caught)
     return out

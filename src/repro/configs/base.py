@@ -214,6 +214,11 @@ class ServeConfig:
                 f"ServeConfig: prefill_chunk ({self.prefill_chunk}) exceeds "
                 f"max_seq ({self.max_seq}) — an append chunk could not fit "
                 "a slot's KV rows")
+        if self.kv_cache_dtype not in ("bfloat16", "bf16", "int8",
+                                       "fp8_e4m3"):
+            raise ValueError(
+                f"ServeConfig: kv_cache_dtype must be one of 'bfloat16', "
+                f"'bf16', 'int8', 'fp8_e4m3', got {self.kv_cache_dtype!r}")
         if self.prefill_kv_block <= 0 or self.decode_kv_block <= 0:
             raise ValueError(
                 f"ServeConfig: prefill_kv_block ({self.prefill_kv_block}) "

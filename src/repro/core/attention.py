@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core import normalizers
 from repro.distributed.sharding import shard
+from repro.kernels import cache_layout as CL
 from repro.kernels.cache_layout import kv_mask
 from repro.nn import layers as L
 from repro.nn import rope as R
@@ -191,7 +192,10 @@ def _append_cache_write(cache, new, index):
     the window start is clamped to ``L - c`` and the chunk rows are shifted
     to their true absolute positions; window rows below ``index`` keep the
     existing (real) cache content. In the common chunk-aligned case the
-    offset is 0 and this reduces to a plain dynamic_update_slice."""
+    offset is 0 and this reduces to a plain dynamic_update_slice.
+
+    Shape-generic past the row axis: (b, c, hkv, dk) data leaves and
+    (b, c, hkv) quantization-scale leaves share this write."""
     L_, c = cache.shape[1], new.shape[1]
 
     def one(cb, nb, ib):
@@ -199,8 +203,8 @@ def _append_cache_write(cache, new, index):
         off = ib - start
         win = jax.lax.dynamic_slice_in_dim(cb, start, c, axis=0)
         rows = jnp.arange(c)
-        new_win = jnp.where((rows >= off)[:, None, None],
-                            jnp.roll(nb, off, axis=0), win)
+        keep = (rows >= off).reshape((c,) + (1,) * (nb.ndim - 1))
+        new_win = jnp.where(keep, jnp.roll(nb, off, axis=0), win)
         return jax.lax.dynamic_update_slice_in_dim(cb, new_win, start, axis=0)
 
     return jax.vmap(one)(cache, new.astype(cache.dtype), index)
@@ -277,7 +281,8 @@ def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
 
 
 def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
-                     window=0, softcap=0.0, merged=True, kv_chunk=1024):
+                     window=0, softcap=0.0, merged=True, kv_chunk=1024,
+                     k_scale=None, v_scale=None):
     """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
     k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
     ``index``; lengths: (b,) real (non-pad) tokens in this chunk.
@@ -287,6 +292,11 @@ def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
     by the caller (their K/V never entered the cache — see attention_apply).
     The KV loop runs only up to the highest filled chunk, so cost tracks the
     fill level, not the cache capacity.
+
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 row scales for quantized
+    caches — each gathered block is dequantized block-at-a-time (the same
+    round-trip the Pallas kernel performs in VMEM); the full cache is never
+    materialized dequantized.
     """
     L_ = k.shape[1]
     kc = min(kv_chunk, L_)
@@ -295,11 +305,20 @@ def append_attention(q, k, v, index, lengths, *, norm_kind, norm_params,
     if pad:
         k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+            v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
     hi = jnp.max(-(-(index + lengths) // kc))                # dynamic bound
 
     def gather(j):
-        return (jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1),
-                jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1))
+        k_blk = jax.lax.dynamic_slice_in_dim(k, j * kc, kc, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, j * kc, kc, axis=1)
+        if k_scale is not None:
+            ks = jax.lax.dynamic_slice_in_dim(k_scale, j * kc, kc, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v_scale, j * kc, kc, axis=1)
+            k_blk = CL.dequant_block(k_blk, ks, q.dtype)
+            v_blk = CL.dequant_block(v_blk, vs, q.dtype)
+        return k_blk, v_blk
 
     return _kv_walk(q, index, lengths, gather, hi, kc, k.shape[2],
                     norm_kind=norm_kind, norm_params=norm_params,
@@ -334,7 +353,8 @@ def _paged_cache_write(pool, new, index, lengths, page_table):
 
 
 def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
-                    norm_params, window=0, softcap=0.0, merged=True):
+                    norm_params, window=0, softcap=0.0, merged=True,
+                    k_scale=None, v_scale=None):
     """Attention of a (b, c, H, dk) chunk against page-pool KV.
 
     kp, vp: (P, ps, hkv, dk) shared pools; page_table: (b, max_pages) int32
@@ -351,13 +371,21 @@ def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
     @ v`` partial is final (the paper's sync-free property is what makes
     paging this cheap). softmax/softermax keep their online (m, l) rescale
     fallback across pages. Unmapped entries are clamped to page 0; every
-    position they could contribute sits at kpos >= kv_len and is masked."""
+    position they could contribute sits at kpos >= kv_len and is masked.
+
+    ``k_scale``/``v_scale``: (P, ps, hkv) fp32 scale pools for quantized
+    page pools — each gathered page is dequantized page-at-a-time (the
+    round-trip the Pallas kernel performs in VMEM)."""
     ps = kp.shape[1]
     hi = jnp.max(-(-(index + lengths) // ps))                # dynamic bound
 
     def gather(j):
         pid = jnp.maximum(page_table[:, j], 0)               # (b,)
-        return kp[pid], vp[pid]                              # (b, ps, hkv, dk)
+        k_blk, v_blk = kp[pid], vp[pid]                      # (b, ps, hkv, dk)
+        if k_scale is not None:
+            k_blk = CL.dequant_block(k_blk, k_scale[pid], q.dtype)
+            v_blk = CL.dequant_block(v_blk, v_scale[pid], q.dtype)
+        return k_blk, v_blk
 
     return _kv_walk(q, index, lengths, gather, hi, ps, kp.shape[2],
                     norm_kind=norm_kind, norm_params=norm_params,
@@ -366,16 +394,23 @@ def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
 
 # ---------------------------------------------------- decode attention ----
 def decode_attention(q, k, v, index, *, norm_kind, norm_params, window=0,
-                     softcap=0.0, merged=True):
+                     softcap=0.0, merged=True, k_scale=None, v_scale=None):
     """q: (b, 1, H, dk); k, v: (b, L, hkv, dk); index: (b,) current position.
 
     Materializes the single score row (cheap even at 512k). With consmax the
     kv reduction is a plain weighted sum — partial sums across a sharded L
     axis combine with one psum and no (m, l) exchange.
+
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 row scales for a quantized
+    cache, applied in-register by the einsum inputs (fallback path only —
+    the Pallas decode kernel dequantizes per-block in VMEM).
     """
     b, _, H, dk = q.shape
     L_, hkv = k.shape[1], k.shape[2]
     g = H // hkv
+    if k_scale is not None:
+        k = CL.dequant_block(k, k_scale, q.dtype)
+        v = CL.dequant_block(v, v_scale, q.dtype)
     qg = q.reshape(b, hkv, g, dk)
     s = jnp.einsum("bhgd,bchd->bhgc", qg, k,
                    preferred_element_type=jnp.float32)
@@ -423,6 +458,11 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     decode_active: (b,) bool — one-token decode only: slots where False
     keep their cache row and index untouched (their logits are garbage to
     be discarded), letting a shared decode step skip prefilling/free slots.
+    Quantized KV: when the cache dict carries ``k_scale``/``v_scale``
+    leaves (int8/fp8 caches — see models.transformer.init_caches), fresh
+    K/V rows are quantized per-row-per-head at write time and the kernels
+    (or jnp fallbacks) dequantize block-at-a-time at read time; the cache
+    is never materialized in a wide dtype.
     page_table: (b, max_pages) int32 — paged KV: the cache's k/v leaves are
     shared (num_pages, page_size, hkv, dk) pools and each slot's logical
     rows live on the pages its table row maps (-1 = unmapped). Applies to
@@ -473,6 +513,16 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
             k = R.apply_rope(k, pos, rotary_dim=rot, theta=cfg.rope_theta,
                              interleaved=interleaved)
         # pad rows / inactive slots are dropped by the scatter itself
+        ksp = vsp = None
+        if "k_scale" in cache:
+            # quantize fresh rows before they enter the pool; the per-row
+            # fp32 scales ride the same page-table scatter as the data
+            k, ksc = CL.quantize_kv(k, cache["k"].dtype)
+            v, vsc = CL.quantize_kv(v, cache["v"].dtype)
+            ksp = _paged_cache_write(cache["k_scale"], ksc, idx, lengths,
+                                     page_table)
+            vsp = _paged_cache_write(cache["v_scale"], vsc, idx, lengths,
+                                     page_table)
         kp = _paged_cache_write(cache["k"], k, idx, lengths, page_table)
         vp = _paged_cache_write(cache["v"], v, idx, lengths, page_table)
         if (prefill_append is not None and prefill_kernel
@@ -486,7 +536,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0, fill_bound=fill_bound)
+                scale=1.0, fill_bound=fill_bound, k_scale=ksp, v_scale=vsp)
         elif (prefill_append is None and decode_kernel
                 and cfg.score_norm == "consmax"):
             from repro.kernels.consmax_decode.ops import consmax_decode_paged_op
@@ -495,13 +545,16 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0, fill_bound=fill_bound)
+                scale=1.0, fill_bound=fill_bound, k_scale=ksp, v_scale=vsp)
         else:
             out = paged_attention(
                 q, kp, vp, page_table, idx, lengths,
                 norm_kind=cfg.score_norm, norm_params=p["score_norm"],
-                window=window, softcap=cfg.attn_softcap, merged=merged)
+                window=window, softcap=cfg.attn_softcap, merged=merged,
+                k_scale=ksp, v_scale=vsp)
         new_cache = {"k": kp, "v": vp, "index": idx + lengths}
+        if ksp is not None:
+            new_cache.update(k_scale=ksp, v_scale=vsp)
     elif cache is not None and prefill_append is not None and not cross:
         # chunked append-at-index prefill: x is a (b, c) chunk at per-slot
         # cache position ``index``; prefill_append holds real chunk lengths
@@ -517,6 +570,14 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
         keep = (jnp.arange(s)[None, :] < lengths[:, None])[..., None, None]
         k = jnp.where(keep, k, 0).astype(k.dtype)
         v = jnp.where(keep, v, 0).astype(v.dtype)
+        ks_cache = vs_cache = None
+        if "k_scale" in cache:
+            # quantize after pad-zeroing: zero rows quantize to (0, 1.0)
+            # and dequantize back to exact zeros
+            k, ksc = CL.quantize_kv(k, cache["k"].dtype)
+            v, vsc = CL.quantize_kv(v, cache["v"].dtype)
+            ks_cache = _append_cache_write(cache["k_scale"], ksc, idx)
+            vs_cache = _append_cache_write(cache["v_scale"], vsc, idx)
         k_cache = _append_cache_write(cache["k"], k, idx)
         v_cache = _append_cache_write(cache["v"], v, idx)
         k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
@@ -531,14 +592,19 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                 jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                 jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                scale=1.0, bk=prefill_kv_block, fill_bound=fill_bound)
+                scale=1.0, bk=prefill_kv_block, fill_bound=fill_bound,
+                k_scale=ks_cache, v_scale=vs_cache)
         else:
+            app_k = k_cache if ks_cache is not None else k_cache.astype(cdt)
+            app_v = v_cache if vs_cache is not None else v_cache.astype(cdt)
             out = append_attention(
-                q, k_cache.astype(cdt), v_cache.astype(cdt), idx, lengths,
+                q, app_k, app_v, idx, lengths,
                 norm_kind=cfg.score_norm, norm_params=p["score_norm"],
                 window=window, softcap=cfg.attn_softcap, merged=merged,
-                kv_chunk=kv_chunk)
+                kv_chunk=kv_chunk, k_scale=ks_cache, v_scale=vs_cache)
         new_cache = {"k": k_cache, "v": v_cache, "index": idx + lengths}
+        if ks_cache is not None:
+            new_cache.update(k_scale=ks_cache, v_scale=vs_cache)
     elif cache is None or s > 1:
         # training, or whole-prompt prefill (cache is filled afterwards)
         if rope_on:
@@ -554,12 +620,22 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
             merged=merged, q_chunk=q_chunk, kv_chunk=kv_chunk)
         new_cache = None
         if cache is not None and not cross:                  # prefill write
+            if "k_scale" in cache:
+                # attention above ran on full-precision K/V; only the cache
+                # write pays the quantization round-trip
+                k, ksc = CL.quantize_kv(k, cache["k"].dtype)
+                v, vsc = CL.quantize_kv(v, cache["v"].dtype)
             k_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
             v_cache = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
             new_cache = {"k": k_cache, "v": v_cache,
                          "index": jnp.full((b,), s, jnp.int32)}
+            if "k_scale" in cache:
+                new_cache["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k_scale"], ksc, 0, axis=1)
+                new_cache["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v_scale"], vsc, 0, axis=1)
     else:
         # one-token decode: s == 1
         idx = cache["index"]                                 # (b,) int32
@@ -592,6 +668,14 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     return jax.lax.dynamic_update_slice_in_dim(
                         cb, jnp.where(ab, nb, old), ib, axis=0)
                 return jax.vmap(one)(c, new, i, decode_active)
+            ks_cache = vs_cache = None
+            if "k_scale" in cache:
+                # quantize the one fresh row; ``upd`` is shape-generic so
+                # the (b, 1, hkv) scale row shares the same slot write
+                k, ksc = CL.quantize_kv(k, cache["k"].dtype)
+                v, vsc = CL.quantize_kv(v, cache["v"].dtype)
+                ks_cache = upd(cache["k_scale"], ksc, idx)
+                vs_cache = upd(cache["v_scale"], vsc, idx)
             k_cache = upd(cache["k"], k.astype(cache["k"].dtype), idx)
             v_cache = upd(cache["v"], v.astype(cache["v"].dtype), idx)
             k_cache = shard(k_cache, "act_batch,act_kv_seq,act_kv_heads,")
@@ -606,17 +690,24 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     jnp.broadcast_to(p["score_norm"]["beta"], (H,)),
                     jnp.broadcast_to(p["score_norm"]["gamma"], (H,)),
                     window=window, softcap=cfg.attn_softcap, merged=merged,
-                    scale=1.0, bk=decode_kv_block, fill_bound=fill_bound)
+                    scale=1.0, bk=decode_kv_block, fill_bound=fill_bound,
+                    k_scale=ks_cache, v_scale=vs_cache)
             else:
-                out = decode_attention(q, k_cache.astype(cdt),
-                                       v_cache.astype(cdt), idx,
+                dec_k = (k_cache if ks_cache is not None
+                         else k_cache.astype(cdt))
+                dec_v = (v_cache if vs_cache is not None
+                         else v_cache.astype(cdt))
+                out = decode_attention(q, dec_k, dec_v, idx,
                                        norm_kind=cfg.score_norm,
                                        norm_params=p["score_norm"],
                                        window=window,
-                                       softcap=cfg.attn_softcap, merged=merged)
+                                       softcap=cfg.attn_softcap, merged=merged,
+                                       k_scale=ks_cache, v_scale=vs_cache)
             step = (1 if decode_active is None
                     else decode_active.astype(idx.dtype))
             new_cache = {"k": k_cache, "v": v_cache, "index": idx + step}
+            if ks_cache is not None:
+                new_cache.update(k_scale=ks_cache, v_scale=vs_cache)
 
     out = L.heads_out(p["o"], out, dtype=cdt)
     out = shard(out, "act_batch,act_seq,act_embed")

@@ -18,6 +18,17 @@ materialized. Everything both kernel families agree on lives here:
   absolute position ``qpos`` sees cache row ``kpos`` iff ``kpos < kv_len``,
   ``qpos >= kpos`` and (local layers) ``qpos - kpos < window``.
 * ``consmax_weights`` — Eq. 2 / merged Eq. 3 of the paper.
+* ``quantize_kv`` / ``dequantize_kv`` / ``dequant_block`` — the ONE
+  quantization contract for the serving KV caches (``kv_dtype`` ∈
+  {bfloat16, int8, fp8_e4m3}): per-row-per-head absmax scaling into fp32
+  scale leaves that live beside the cache (contiguous ``(b, L, hkv)`` /
+  paged ``(P, ps, hkv)``), quantized at *write* time and dequantized
+  per-block in VMEM inside the kernels (``dequant_block``) or per-block in
+  the jnp fallback walks (``dequantize_kv``) — the same round-trip on both
+  paths, so kernel-vs-oracle comparisons stay exact. Per-row (not
+  per-page-scalar) granularity is what lets a page fill incrementally:
+  a decode append quantizes only its own row and never forces earlier
+  rows of the page to requantize against a grown amax.
 * ``live_blocks`` / ``shard_live`` / ``fill_bounded_sum`` — the fill
   bounding shared by the decode AND prefill kernels: serving caches are
   allocated at *capacity* but filled to the per-slot ``index``, and ConSmax
@@ -174,3 +185,103 @@ def consmax_weights(s, beta, gamma, merged: bool):
     if merged:
         return jnp.exp(-beta) / gamma * jnp.exp(s)
     return jnp.exp(s - beta) / gamma
+
+
+# --------------------------------------------------- quantized KV cache ----
+# The serving caches may store K/V below bf16 (ServeConfig.kv_cache_dtype):
+# decode is HBM-bandwidth-bound, so int8/fp8 KV halves the bytes the KV walk
+# moves per step. One scale per cache ROW per KV HEAD (fp32, living in
+# ``k_scale``/``v_scale`` cache leaves shaped like the cache minus its dk
+# axis) — per-row granularity means an incremental append (one decode row
+# into a partially filled page) never requantizes earlier rows, and the
+# scale leaves add only hkv * 4 bytes per row next to hkv * dk data bytes
+# (int8 total ≈ 1.97x smaller than bf16 at dk = 64).
+
+KV_DTYPES = {
+    "bfloat16": jnp.bfloat16,
+    "bf16": jnp.bfloat16,
+    "int8": jnp.int8,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+}
+
+
+def kv_cache_dtype(name):
+    """The jnp dtype a ``ServeConfig.kv_cache_dtype`` name stores K/V in.
+    (``jnp.dtype("fp8_e4m3")`` would throw — the names are ours, the
+    mapping lives here so every consumer agrees.)"""
+    if isinstance(name, str):
+        if name not in KV_DTYPES:
+            raise ValueError(
+                f"unknown kv cache dtype {name!r}; expected one of "
+                f"{sorted(KV_DTYPES)}")
+        return jnp.dtype(KV_DTYPES[name])
+    return jnp.dtype(name)
+
+
+def kv_quantized(name) -> bool:
+    """True iff this kv dtype needs scale leaves + write-time quantization
+    (bf16 is stored as-is — the default path is byte-identical to before
+    quantization existed)."""
+    return kv_cache_dtype(name) in (jnp.dtype(jnp.int8),
+                                    jnp.dtype(jnp.float8_e4m3fn))
+
+
+def kv_qmax(dtype) -> float:
+    """Largest representable magnitude the quantizer scales rows onto."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.int8):
+        return 127.0
+    if dtype == jnp.dtype(jnp.float8_e4m3fn):
+        return 448.0
+    raise ValueError(f"kv_qmax: {dtype} is not a quantized kv dtype")
+
+
+def quantize_kv(x, dtype):
+    """Quantize K/V rows ``x``: (..., hkv, dk) -> (q (..., hkv, dk) in
+    ``dtype``, scale (..., hkv) fp32) with per-row-per-head absmax scaling.
+
+    All-zero rows (pad rows, untouched cache tail) get scale 1.0 and
+    quantize to exact zeros, so they dequantize to the exact zeros the
+    unquantized path stores. Called at every cache WRITE site (prefill
+    append, paged scatter, decode append, whole-prompt fill) — reads never
+    requantize."""
+    dtype = jnp.dtype(dtype)
+    xf = x.astype(jnp.float32)
+    qmax = kv_qmax(dtype)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / qmax, 1.0).astype(jnp.float32)
+    q = xf / scale[..., None]
+    if dtype == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q.astype(dtype), scale
+
+
+def dequantize_kv(q, scale, out_dtype=jnp.float32):
+    """Inverse of ``quantize_kv``: (..., hkv, dk) quantized values times
+    their (..., hkv) fp32 row scales. The jnp fallback walks call this
+    per-BLOCK (a page or KV chunk at a time) — the full cache is never
+    upcast into HBM on the serving path."""
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+            ).astype(out_dtype)
+
+
+def dequant_block(x, scale, out_dtype):
+    """In-kernel per-block dequant: ``x`` a (..., rows, dk) VMEM tile,
+    ``scale`` its (..., rows) fp32 scales. Identical arithmetic to
+    ``dequantize_kv`` (f32 multiply, then cast) so the Pallas kernels and
+    the jnp oracles round-trip bit-identically."""
+    return (x.astype(jnp.float32) * scale[..., None]).astype(out_dtype)
+
+
+def block_scale_rows(s, bk_eff: int, n_blocks: int):
+    """Pad a (b, L, hkv) scale leaf along axis 1 to match the (rare)
+    degenerate-divisor padding ``block_cache_rows`` applied to its K/V —
+    padded rows carry scale 0 and sit at kpos >= kv_len, masked to exact
+    zeros either way. No-op (and no copy) for serving shapes."""
+    if s is None:
+        return None
+    L = s.shape[1]
+    target = bk_eff * n_blocks
+    if L == target:
+        return s
+    return jnp.pad(s, ((0, 0), (0, target - L), (0, 0)))

@@ -80,13 +80,19 @@ from repro.kernels import tpu_compiler_params
 from repro.kernels import cache_layout as CL
 
 
-def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
+def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, *rest,
             scale: float, window: int, softcap: float, bk: int, g: int,
             merged: bool):
+    *scale_refs, o_ref = rest                        # quantized KV: (ks, vs)
     n = len_ref[0, 0]                                # valid kv count (<= L)
     q = q_ref[0, 0]                                  # (g, d)
-    k = k_ref[0, :, 0].astype(q.dtype)               # (bk, d) — cache layout
-    v = v_ref[0, :, 0].astype(q.dtype)
+    if scale_refs:                                   # dequant per-block in
+        ks_ref, vs_ref = scale_refs                  # VMEM — HBM stays narrow
+        k = CL.dequant_block(k_ref[0, :, 0], ks_ref[0, :, 0], q.dtype)
+        v = CL.dequant_block(v_ref[0, :, 0], vs_ref[0, :, 0], q.dtype)
+    else:
+        k = k_ref[0, :, 0].astype(q.dtype)           # (bk, d) — cache layout
+        v = v_ref[0, :, 0].astype(q.dtype)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     if softcap > 0:
@@ -105,21 +111,27 @@ def _kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref, *,
         preferred_element_type=jnp.float32)
 
 
-def _folded_kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, o_ref,
-                   *, scale: float, window: int, softcap: float, bk: int,
+def _folded_kernel(len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref, *rest,
+                   scale: float, window: int, softcap: float, bk: int,
                    g: int, merged: bool, bf: int):
     """The fill-bounded contiguous kernel: ``bf`` slots per block, so the
     per-program overhead is paid once per (slot-group, head, shard) instead
     of once per (slot, head, shard). The batched dots are bit-identical to
     ``bf`` per-slot dots; dead lanes inside a live group are masked to the
     exact zeros the capacity sweep computed for them."""
+    *scale_refs, o_ref = rest                        # quantized KV: (ks, vs)
     ik = pl.program_id(2)
     n = jnp.stack([len_ref[i, 0] for i in range(bf)])    # (bf,) SMEM scalars
 
     def compute():
         q = q_ref[:, 0]                              # (bf, g, d)
-        k = k_ref[:, :, 0].astype(q.dtype)           # (bf, bk, d)
-        v = v_ref[:, :, 0].astype(q.dtype)
+        if scale_refs:                               # per-block VMEM dequant
+            ks_ref, vs_ref = scale_refs
+            k = CL.dequant_block(k_ref[:, :, 0], ks_ref[:, :, 0], q.dtype)
+            v = CL.dequant_block(v_ref[:, :, 0], vs_ref[:, :, 0], q.dtype)
+        else:
+            k = k_ref[:, :, 0].astype(q.dtype)       # (bf, bk, d)
+            v = v_ref[:, :, 0].astype(q.dtype)
         s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (0,))),
                                 preferred_element_type=jnp.float32) * scale
         if softcap > 0:
@@ -159,10 +171,16 @@ def _fold_factor(b: int, bk: int, d: int, limit_bytes: int = 2 << 20) -> int:
 def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
                    softcap: float = 0.0, merged: bool = True,
                    scale: float | None = None, bk: int = 256,
-                   fill_bound: bool = True, interpret: bool = False):
+                   fill_bound: bool = True, interpret: bool = False,
+                   k_scale=None, v_scale=None):
     """q: (b, nh, d); k, v: (b, L, hkv, d) — the model's cache layout,
     consumed as-is; lengths: (b,) int32 valid counts; beta/gamma: (nh,)
     fp32. Returns (b, nh, d) in q.dtype.
+
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 per-row-per-head quant scales
+    for a quantized (int8/fp8) cache — ride in as small extra operands and
+    the kernel upcasts each KV block in VMEM (``cache_layout.dequant_block``),
+    so the HBM KV walk moves the narrow bytes. None = cache stored as-is.
 
     Grid (b, hkv, n_shards) — ALL dims parallel. Shard partials are summed
     in fp32 by the caller-side reduction below (a pure addition; the absence
@@ -187,6 +205,10 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
     if scale is None:
         scale = 1.0 / math.sqrt(d)
     k, v, bk, ns = CL.block_cache_rows(k, v, bk)
+    quant = k_scale is not None
+    if quant:
+        k_scale = CL.block_scale_rows(k_scale, bk, ns)
+        v_scale = CL.block_scale_rows(v_scale, bk, ns)
 
     qg = q.reshape(b, hkv, g, d)
     beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv)
@@ -201,52 +223,66 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
         kernel = functools.partial(_folded_kernel, scale=scale, window=window,
                                    softcap=softcap, bk=bk, g=g, merged=merged,
                                    bf=bf)
+        in_specs = [
+            pl.BlockSpec((bf, 1), lambda ig, ih, ik: (ig, 0),
+                         memory_space=pltpu.SMEM),              # lengths
+            pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # beta
+            pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # gamma
+            pl.BlockSpec((bf, 1, g, d),
+                         lambda ig, ih, ik: (ig, ih, 0, 0)),
+            pl.BlockSpec((bf, bk, 1, d),
+                         lambda ig, ih, ik: (ig, ik, ih, 0)),
+            pl.BlockSpec((bf, bk, 1, d),
+                         lambda ig, ih, ik: (ig, ik, ih, 0)),
+        ]
+        operands = [len2, beta2, gamma2, qg, k, v]
+        if quant:
+            # fp32 row scales, blocked alongside their K/V shard (dk/4x
+            # smaller than the data operand they rescale)
+            in_specs += [pl.BlockSpec((bf, bk, 1),
+                                      lambda ig, ih, ik: (ig, ik, ih))] * 2
+            operands += [k_scale, v_scale]
         partials = pl.pallas_call(
             kernel,
             grid=(b // bf, hkv, ns_live),
-            in_specs=[
-                pl.BlockSpec((bf, 1), lambda ig, ih, ik: (ig, 0),
-                             memory_space=pltpu.SMEM),              # lengths
-                pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # beta
-                pl.BlockSpec((1, g), lambda ig, ih, ik: (ih, 0)),   # gamma
-                pl.BlockSpec((bf, 1, g, d),
-                             lambda ig, ih, ik: (ig, ih, 0, 0)),
-                pl.BlockSpec((bf, bk, 1, d),
-                             lambda ig, ih, ik: (ig, ik, ih, 0)),
-                pl.BlockSpec((bf, bk, 1, d),
-                             lambda ig, ih, ik: (ig, ik, ih, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((bf, 1, 1, g, d),
                                    lambda ig, ih, ik: (ig, ih, ik, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
             interpret=interpret,
             compiler_params=tpu_compiler_params(
                 dimension_semantics=("parallel", "parallel", "parallel")),
-        )(len2, beta2, gamma2, qg, k, v)
+        )(*operands)
     else:
         kernel = functools.partial(_kernel, scale=scale, window=window,
                                    softcap=softcap, bk=bk, g=g, merged=merged)
+        in_specs = [
+            pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
+                         memory_space=pltpu.SMEM),              # lengths
+            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # beta
+            pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # gamma
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, ik: (ib, ik, ih, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda ib, ih, ik: (ib, ik, ih, 0)),
+        ]
+        operands = [len2, beta2, gamma2, qg, k, v]
+        if quant:
+            in_specs += [pl.BlockSpec((1, bk, 1),
+                                      lambda ib, ih, ik: (ib, ik, ih))] * 2
+            operands += [k_scale, v_scale]
         partials = pl.pallas_call(
             kernel,
             grid=(b, hkv, ns),
-            in_specs=[
-                pl.BlockSpec((1, 1), lambda ib, ih, ik: (ib, 0),
-                             memory_space=pltpu.SMEM),              # lengths
-                pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # beta
-                pl.BlockSpec((1, g), lambda ib, ih, ik: (ih, 0)),   # gamma
-                pl.BlockSpec((1, 1, g, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
-                pl.BlockSpec((1, bk, 1, d),
-                             lambda ib, ih, ik: (ib, ik, ih, 0)),
-                pl.BlockSpec((1, bk, 1, d),
-                             lambda ib, ih, ik: (ib, ik, ih, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, 1, g, d),
                                    lambda ib, ih, ik: (ib, ih, ik, 0, 0)),
             out_shape=jax.ShapeDtypeStruct((b, hkv, ns, g, d), jnp.float32),
             interpret=interpret,
             compiler_params=tpu_compiler_params(
                 dimension_semantics=("parallel", "parallel", "parallel")),
-        )(len2, beta2, gamma2, qg, k, v)
+        )(*operands)
 
     out = CL.fill_bounded_sum(partials, ns_live)     # the sync-free combine
     return out.reshape(b, nh, d).astype(q.dtype)
@@ -254,15 +290,21 @@ def consmax_decode(q, k, v, lengths, beta, gamma, *, window: int = 0,
 
 # ------------------------------------------------------------- paged KV ----
 def _paged_kernel(tab_ref, len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
-                  o_ref, *, scale: float, window: int, softcap: float,
+                  *rest, scale: float, window: int, softcap: float,
                   ps: int, g: int, merged: bool, bounded: bool):
+    *scale_refs, o_ref = rest                        # quantized KV: (ks, vs)
     ib, ij = pl.program_id(0), pl.program_id(2)
     n = len_ref[ib]                                  # valid logical rows
 
     def compute():
         q = q_ref[0, 0]                              # (g, d)
-        k = k_ref[0, :, 0].astype(q.dtype)           # (ps, d) — one page
-        v = v_ref[0, :, 0].astype(q.dtype)
+        if scale_refs:                               # per-page VMEM dequant
+            ks_ref, vs_ref = scale_refs
+            k = CL.dequant_block(k_ref[0, :, 0], ks_ref[0, :, 0], q.dtype)
+            v = CL.dequant_block(v_ref[0, :, 0], vs_ref[0, :, 0], q.dtype)
+        else:
+            k = k_ref[0, :, 0].astype(q.dtype)       # (ps, d) — one page
+            v = v_ref[0, :, 0].astype(q.dtype)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap > 0:
@@ -298,10 +340,14 @@ def _paged_kernel(tab_ref, len_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
 def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
                          window: int = 0, softcap: float = 0.0,
                          merged: bool = True, scale: float | None = None,
-                         fill_bound: bool = True, interpret: bool = False):
+                         fill_bound: bool = True, interpret: bool = False,
+                         k_scale=None, v_scale=None):
     """Paged split-KV ConSmax decode. q: (b, nh, d); kp, vp: shared page
     pools (P, ps, nkv, d); page_table: (b, max_pages) int32 (-1 = unmapped);
     lengths: (b,) valid logical rows; beta/gamma: (nh,) fp32.
+    ``k_scale``/``v_scale``: (P, ps, nkv) fp32 per-row-per-head quant scale
+    pools living beside the page table for a quantized (int8/fp8) KV pool —
+    gathered through the same page index map and upcast per-page in VMEM.
 
     The KV grid axis iterates *page-table entries*: the table rides in as a
     scalar-prefetch operand, so program (ib, ih, ij) DMAs pool page
@@ -338,17 +384,26 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
     def page_map(ib, ih, ij, tab_ref, len_ref):
         return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
 
+    def scale_page_map(ib, ih, ij, tab_ref, len_ref):
+        return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih)
+
+    in_specs = [
+        pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # beta
+        pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # gamma
+        pl.BlockSpec((1, 1, g, d),
+                     lambda ib, ih, ij, *_: (ib, ih, 0, 0)),    # q
+        pl.BlockSpec((1, ps, 1, d), page_map),                  # k page
+        pl.BlockSpec((1, ps, 1, d), page_map),                  # v page
+    ]
+    operands = [beta2, gamma2, qg, kp, vp]
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_page_map)] * 2
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                       # page table + lengths
         grid=(b, nkv, npg_live),
-        in_specs=[
-            pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # beta
-            pl.BlockSpec((1, g), lambda ib, ih, ij, *_: (ih, 0)),   # gamma
-            pl.BlockSpec((1, 1, g, d),
-                         lambda ib, ih, ij, *_: (ib, ih, 0, 0)),    # q
-            pl.BlockSpec((1, ps, 1, d), page_map),                  # k page
-            pl.BlockSpec((1, ps, 1, d), page_map),                  # v page
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, g, d),
                                lambda ib, ih, ij, *_: (ib, ih, ij, 0, 0)),
     )
@@ -359,7 +414,7 @@ def consmax_decode_paged(q, kp, vp, page_table, lengths, beta, gamma, *,
         interpret=interpret,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel")),
-    )(tab, len1, beta2, gamma2, qg, kp, vp)
+    )(tab, len1, *operands)
 
     out = CL.fill_bounded_sum(partials, npg_live)    # the sync-free combine
     return out.reshape(b, nh, d).astype(q.dtype)

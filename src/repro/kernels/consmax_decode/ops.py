@@ -26,7 +26,7 @@ def _on_cpu() -> bool:
                                    "bk", "fill_bound", "interpret"))
 def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
                       merged=True, scale=None, bk=256, fill_bound=True,
-                      interpret=None):
+                      interpret=None, k_scale=None, v_scale=None):
     """q: (b, 1, H, dk); k, v: (b, L, hkv, dk) — the cache, consumed in its
     stored layout (the kernel blocks the hkv axis, so no per-step transpose
     copy); index: (b,) current position.
@@ -36,12 +36,14 @@ def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
     ``fill_bound`` (default True) bounds KV grid work by the traced fill
     level instead of cache capacity — ``index`` stays a value, so the
     compiled step is shared across every fill level.
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 row scales for a quantized
+    (int8/fp8) cache — traced operands, dequantized per-block in VMEM.
     """
     interp = _on_cpu() if interpret is None else interpret
     out = consmax_decode(q[:, 0], k, v, index + 1, beta, gamma,
                          window=window, softcap=softcap, merged=merged,
                          scale=scale, bk=bk, fill_bound=fill_bound,
-                         interpret=interp)
+                         interpret=interp, k_scale=k_scale, v_scale=v_scale)
     return out[:, None]
 
 
@@ -49,7 +51,8 @@ def consmax_decode_op(q, k, v, index, beta, gamma, *, window=0, softcap=0.0,
                                    "fill_bound", "interpret"))
 def consmax_decode_paged_op(q, kp, vp, page_table, lengths, beta, gamma, *,
                             window=0, softcap=0.0, merged=True, scale=None,
-                            fill_bound=True, interpret=None):
+                            fill_bound=True, interpret=None, k_scale=None,
+                            v_scale=None):
     """Paged-pool variant. q: (b, 1, H, dk); kp, vp: shared page pools
     (P, ps, hkv, dk) in the model's cache layout (no transpose — the kernel
     blocks the hkv axis directly, so the pool is never copied per step);
@@ -58,10 +61,13 @@ def consmax_decode_paged_op(q, kp, vp, page_table, lengths, beta, gamma, *,
 
     Returns (b, 1, H, dk) in q.dtype. ``fill_bound`` bounds the page-table
     walk by the traced batch-max fill instead of the table's capacity.
+    ``k_scale``/``v_scale``: (P, ps, hkv) fp32 scale pools for a quantized
+    KV pool, gathered through the same page-table index map.
     """
     interp = _on_cpu() if interpret is None else interpret
     out = consmax_decode_paged(q[:, 0], kp, vp, page_table, lengths, beta,
                                gamma, window=window, softcap=softcap,
                                merged=merged, scale=scale,
-                               fill_bound=fill_bound, interpret=interp)
+                               fill_bound=fill_bound, interpret=interp,
+                               k_scale=k_scale, v_scale=v_scale)
     return out[:, None]

@@ -7,8 +7,11 @@ import jax.numpy as jnp
 
 
 def consmax_decode_ref(q, k, v, lengths, beta, gamma, *, window=0,
-                       softcap=0.0, merged=True, scale=None):
-    """q: (b, nh, d); k, v: (b, nkv, L, d); lengths: (b,). fp32 math."""
+                       softcap=0.0, merged=True, scale=None,
+                       k_scale=None, v_scale=None):
+    """q: (b, nh, d); k, v: (b, nkv, L, d); lengths: (b,). fp32 math.
+    ``k_scale``/``v_scale``: (b, nkv, L) fp32 row scales for quantized k/v
+    (NOTE: transposed alongside k/v, unlike the kernel's (b, L, nkv))."""
     b, nh, d = q.shape
     nkv, L = k.shape[1], k.shape[2]
     g = nh // nkv
@@ -17,6 +20,9 @@ def consmax_decode_ref(q, k, v, lengths, beta, gamma, *, window=0,
     qf = q.astype(jnp.float32).reshape(b, nkv, g, d)
     kf = k.astype(jnp.float32)
     vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
     s = jnp.einsum("bhgd,bhcd->bhgc", qf, kf) * scale
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)

@@ -77,16 +77,22 @@ MAX_KV_SHARDS = 64
 
 
 def _kernel(idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
-            o_ref, *, scale: float, window: int, softcap: float, bqg: int,
+            *rest, scale: float, window: int, softcap: float, bqg: int,
             bk: int, bq: int, g: int, merged: bool, bounded: bool):
+    *scale_refs, o_ref = rest                        # quantized KV: (ks, vs)
     iq, ik = pl.program_id(2), pl.program_id(3)
     idx = idx_ref[0, 0]                              # chunk start position
     kvl = kvl_ref[0, 0]                              # index + real length
 
     def compute():
         q = q_ref[0, 0]                              # (bqg, d)
-        k = k_ref[0, :, 0].astype(q.dtype)           # (bk, d) — cache layout
-        v = v_ref[0, :, 0].astype(q.dtype)
+        if scale_refs:                               # per-block VMEM dequant
+            ks_ref, vs_ref = scale_refs
+            k = CL.dequant_block(k_ref[0, :, 0], ks_ref[0, :, 0], q.dtype)
+            v = CL.dequant_block(v_ref[0, :, 0], vs_ref[0, :, 0], q.dtype)
+        else:
+            k = k_ref[0, :, 0].astype(q.dtype)       # (bk, d) — cache layout
+            v = v_ref[0, :, 0].astype(q.dtype)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap > 0:
@@ -122,12 +128,15 @@ def _kernel(idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref, k_ref, v_ref,
 def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
                     softcap: float = 0.0, merged: bool = True,
                     scale: float | None = None, bq: int = 128, bk: int = 512,
-                    fill_bound: bool = True, interpret: bool = False):
+                    fill_bound: bool = True, interpret: bool = False,
+                    k_scale=None, v_scale=None):
     """q: (b, c, H, dk) chunk queries at per-slot positions index + [0, c);
     k, v: (b, L, hkv, dk) caches *after* the chunk's K/V were written at
     ``index`` (consumed as stored — no transpose); index, lengths: (b,)
     int32 chunk start positions / real (non-pad) chunk lengths; beta/gamma:
     (H,) fp32. Returns (b, c, H, dk) in q.dtype.
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 per-row-per-head quant scales
+    for a quantized cache, upcast per-block in VMEM (None = stored as-is).
 
     Grid (b, hkv, nq, ns) — ALL dims parallel; shard partials are summed in
     fp32 by the caller-side reduction (pure addition, the sync-free
@@ -156,6 +165,10 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
     nq = c // bq
     k, v, bk, ns = CL.block_cache_rows(
         k, v, max(bk, -(-L // MAX_KV_SHARDS)))
+    quant = k_scale is not None
+    if quant:
+        k_scale = CL.block_scale_rows(k_scale, bk, ns)
+        v_scale = CL.block_scale_rows(v_scale, bk, ns)
 
     qf = CL.fold_gqa(q, hkv)                         # (b, hkv, c*g, dk)
     beta2, gamma2 = CL.tile_head_params(beta, gamma, hkv, c)
@@ -168,23 +181,30 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
                                softcap=softcap, bqg=bqg, bk=bk, bq=bq, g=g,
                                merged=merged, bounded=fill_bound)
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
+                     memory_space=pltpu.SMEM),                  # index
+        pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
+                     memory_space=pltpu.SMEM),                  # kv_len
+        pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # beta
+        pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # gamma
+        pl.BlockSpec((1, 1, bqg, dk),
+                     lambda ib, ih, iq, ik: (ib, ih, iq, 0)),   # q rows
+        pl.BlockSpec((1, bk, 1, dk),
+                     lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # k shard
+        pl.BlockSpec((1, bk, 1, dk),
+                     lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # v shard
+    ]
+    operands = [idx2, kvl2, beta2, gamma2, qf, k, v]
+    if quant:
+        in_specs += [pl.BlockSpec((1, bk, 1),
+                                  lambda ib, ih, iq, ik: (ib, ik, ih))] * 2
+        operands += [k_scale, v_scale]
+
     partials = pl.pallas_call(
         kernel,
         grid=(b, hkv, nq, ns_live),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
-                         memory_space=pltpu.SMEM),                  # index
-            pl.BlockSpec((1, 1), lambda ib, ih, iq, ik: (ib, 0),
-                         memory_space=pltpu.SMEM),                  # kv_len
-            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # beta
-            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ik: (ih, iq)),  # gamma
-            pl.BlockSpec((1, 1, bqg, dk),
-                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),   # q rows
-            pl.BlockSpec((1, bk, 1, dk),
-                         lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # k shard
-            pl.BlockSpec((1, bk, 1, dk),
-                         lambda ib, ih, iq, ik: (ib, ik, ih, 0)),   # v shard
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, 1, bqg, dk),
                                lambda ib, ih, iq, ik: (ib, ih, ik, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, ns, c * g, dk), jnp.float32),
@@ -192,7 +212,7 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "parallel")),
-    )(idx2, kvl2, beta2, gamma2, qf, k, v)
+    )(*operands)
 
     out = CL.fill_bounded_sum(partials, ns_live)     # the sync-free combine
     return CL.unfold_gqa(out, b, c, H).astype(q.dtype)
@@ -200,9 +220,10 @@ def consmax_prefill(q, k, v, index, lengths, beta, gamma, *, window: int = 0,
 
 # ------------------------------------------------------------- paged KV ----
 def _paged_kernel(tab_ref, idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref,
-                  k_ref, v_ref, o_ref, acc_ref, *, scale: float, window: int,
+                  k_ref, v_ref, *rest, scale: float, window: int,
                   softcap: float, bqg: int, ps: int, bq: int, g: int,
                   merged: bool, bounded: bool):
+    *scale_refs, o_ref, acc_ref = rest               # quantized KV: (ks, vs)
     ib, iq, ij = pl.program_id(0), pl.program_id(2), pl.program_id(3)
     nj = pl.num_programs(3)
     idx = idx_ref[ib]
@@ -214,8 +235,13 @@ def _paged_kernel(tab_ref, idx_ref, kvl_ref, beta_ref, gamma_ref, q_ref,
 
     def accumulate():
         q = q_ref[0, 0]                              # (bqg, d)
-        k = k_ref[0, :, 0].astype(q.dtype)           # (ps, d) — one page
-        v = v_ref[0, :, 0].astype(q.dtype)
+        if scale_refs:                               # per-page VMEM dequant
+            ks_ref, vs_ref = scale_refs
+            k = CL.dequant_block(k_ref[0, :, 0], ks_ref[0, :, 0], q.dtype)
+            v = CL.dequant_block(v_ref[0, :, 0], vs_ref[0, :, 0], q.dtype)
+        else:
+            k = k_ref[0, :, 0].astype(q.dtype)       # (ps, d) — one page
+            v = v_ref[0, :, 0].astype(q.dtype)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
         if softcap > 0:
@@ -251,11 +277,15 @@ def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
                           gamma, *, window: int = 0, softcap: float = 0.0,
                           merged: bool = True, scale: float | None = None,
                           bq: int = 128, fill_bound: bool = True,
-                          interpret: bool = False):
+                          interpret: bool = False, k_scale=None,
+                          v_scale=None):
     """Paged fused prefill. q: (b, c, H, dk) chunk queries; kp, vp: shared
     page pools (P, ps, hkv, dk) *after* the chunk's K/V were scattered in;
     page_table: (b, max_pages) int32 (-1 = unmapped); index, lengths: (b,)
     chunk start positions / real chunk lengths. Returns (b, c, H, dk).
+    ``k_scale``/``v_scale``: (P, ps, hkv) fp32 quant-scale pools beside the
+    page table for a quantized KV pool, gathered through the same page
+    index map and upcast per-page in VMEM.
 
     The page axis is the grid's trailing 'arbitrary' dimension accumulating
     into VMEM scratch — a pure ``acc += p @ v`` per page, no (m, l) state —
@@ -297,17 +327,26 @@ def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
     def page_map(ib, ih, iq, ij, tab_ref, idx_ref, kvl_ref):
         return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih, 0)
 
+    def scale_page_map(ib, ih, iq, ij, tab_ref, idx_ref, kvl_ref):
+        return (jnp.maximum(tab_ref[ib, ij], 0), 0, ih)
+
+    in_specs = [
+        pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
+        pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
+        pl.BlockSpec((1, 1, bqg, dk),
+                     lambda ib, ih, iq, ij, *_: (ib, ih, iq, 0)),   # q
+        pl.BlockSpec((1, ps, 1, dk), page_map),                 # k page
+        pl.BlockSpec((1, ps, 1, dk), page_map),                 # v page
+    ]
+    operands = [beta2, gamma2, qf, kp, vp]
+    if k_scale is not None:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_page_map)] * 2
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,                       # table, index, kv_len
         grid=(b, hkv, nq, npg_live),
-        in_specs=[
-            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
-            pl.BlockSpec((1, bqg), lambda ib, ih, iq, ij, *_: (ih, iq)),
-            pl.BlockSpec((1, 1, bqg, dk),
-                         lambda ib, ih, iq, ij, *_: (ib, ih, iq, 0)),   # q
-            pl.BlockSpec((1, ps, 1, dk), page_map),                 # k page
-            pl.BlockSpec((1, ps, 1, dk), page_map),                 # v page
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, bqg, dk),
                                lambda ib, ih, iq, ij, *_: (ib, ih, iq, 0)),
         scratch_shapes=[pltpu.VMEM((bqg, dk), jnp.float32)],
@@ -320,6 +359,6 @@ def consmax_prefill_paged(q, kp, vp, page_table, index, lengths, beta,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
-    )(tab, idx1, kvl1, beta2, gamma2, qf, kp, vp)
+    )(tab, idx1, kvl1, *operands)
 
     return CL.unfold_gqa(out, b, c, H).astype(q.dtype)

@@ -15,16 +15,23 @@ from repro.kernels import cache_layout as CL
 
 def consmax_prefill_ref(q, k, v, index, lengths, beta, gamma, *,
                         window: int = 0, softcap: float = 0.0,
-                        merged: bool = True, scale: float | None = None):
+                        merged: bool = True, scale: float | None = None,
+                        k_scale=None, v_scale=None):
     """q: (b, c, H, dk); k, v: (b, L, hkv, dk); index, lengths: (b,).
+    ``k_scale``/``v_scale``: (b, L, hkv) fp32 row scales for quantized k/v.
     Returns (b, c, H, dk) fp32."""
     b, c, H, dk = q.shape
     L, hkv = k.shape[1], k.shape[2]
     g = H // hkv
     if scale is None:
         scale = 1.0 / math.sqrt(dk)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
     qg = q.astype(jnp.float32).reshape(b, c, hkv, g, dk)
-    s = jnp.einsum("bqhgd,bchd->bhgqc", qg, k.astype(jnp.float32)) * scale
+    s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kf) * scale
     if softcap > 0:
         s = softcap * jnp.tanh(s / softcap)
     qpos = index[:, None] + jnp.arange(c)                    # (b, c)
@@ -34,5 +41,5 @@ def consmax_prefill_ref(q, k, v, index, lengths, beta, gamma, *,
     p = CL.consmax_weights(s, beta.reshape(1, hkv, g, 1, 1),
                            gamma.reshape(1, hkv, g, 1, 1), merged)
     p = jnp.where(mask[:, None, None], p, 0.0)
-    out = jnp.einsum("bhgqc,bchd->bqhgd", p, v.astype(jnp.float32))
+    out = jnp.einsum("bhgqc,bchd->bqhgd", p, vf)
     return out.reshape(b, c, H, dk)

@@ -15,7 +15,8 @@ copy-on-write) — the gate:
 * traces the engine's jitted prefill and decode steps to jaxprs (a trace,
   not a compile — milliseconds per step) and runs the ``jaxpr_lint`` rules:
   no cache-sized layout ops, no vocab-sized outputs under fused sampling,
-  no host callbacks, cache-dtype stability;
+  no host callbacks, cache-dtype stability, and (quantized caches) fp32
+  scale leaves with no full-cache dequant materialized in HBM;
 * captures the serving kernels' Pallas launches without running them
   (``kernel_contracts.capture_launches``) and checks grids/BlockSpecs:
   declared dimension semantics, no parallel write races, VMEM working set
@@ -53,7 +54,7 @@ _CHUNK = 64
 _PAGE = 64
 
 
-def _matrix():
+def _matrix(kv_dtypes=("bfloat16",)):
     from repro.configs.base import ServeConfig
     out = {}
     for paged in (False, True):
@@ -77,6 +78,21 @@ def _matrix():
         max_seq=_MAX_SEQ, prefill_chunk=_CHUNK, max_slots=_MAX_SLOTS,
         decode_kernel=True, prefill_kernel=True, paged_kv=True,
         page_size=_PAGE, prefix_cache=True, score_norm="consmax")
+    # quantized-KV sweep: each non-bf16 dtype analyzes the two production
+    # (kernel-on, fused, fill-bounded) configs with a quantized cache —
+    # the steps must quantize at write time and dequantize per-block in
+    # the kernels, so the cache-layout, dtype-stability and quant-scale
+    # rules all see the int8/fp8 pool plus its fp32 scale leaves
+    for dt in kv_dtypes:
+        if dt in ("bfloat16", "bf16"):
+            continue
+        for paged in (False, True):
+            label = ("paged" if paged else "contig") + f"_fused_bounded_{dt}"
+            out[label] = ServeConfig(
+                max_seq=_MAX_SEQ, prefill_chunk=_CHUNK,
+                max_slots=_MAX_SLOTS, decode_kernel=True,
+                prefill_kernel=True, kv_cache_dtype=dt, paged_kv=paged,
+                page_size=_PAGE, score_norm="consmax")
     return out
 
 
@@ -117,8 +133,13 @@ def _step_targets(cfg, scfg, eng, *, prefix=False):
     from repro.analysis.jaxpr_lint import StepTarget
     from repro.models import transformer as T
     b = scfg.max_slots
-    cache_in = tuple(jax.tree_util.tree_leaves(
-        jax.eval_shape(lambda c: c, eng.caches)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        jax.eval_shape(lambda c: c, eng.caches))
+    cache_in = tuple(leaf for _, leaf in flat)
+    # quantization-scale leaf indices (k_scale / v_scale), empty for bf16
+    scale_leaves = tuple(
+        i for i, (path, _) in enumerate(flat)
+        if str(getattr(path[-1], "key", "")).endswith("_scale"))
 
     inputs = {"active": jnp.ones((b,), jnp.bool_),
               "tokens": jnp.zeros((b,) if scfg.fused_sampling else (b, 1),
@@ -143,11 +164,13 @@ def _step_targets(cfg, scfg, eng, *, prefix=False):
         StepTarget("decode", dj,
                    cache_cells=_cache_threshold(cfg, scfg, "decode"),
                    vocab_size=vocab, cache_in=cache_in,
-                   cache_out=tuple(jax.tree_util.tree_leaves(dshapes[1]))),
+                   cache_out=tuple(jax.tree_util.tree_leaves(dshapes[1])),
+                   scale_leaves=scale_leaves),
         StepTarget("prefill", pj,
                    cache_cells=_cache_threshold(cfg, scfg, "prefill"),
                    vocab_size=vocab, cache_in=cache_in,
-                   cache_out=tuple(jax.tree_util.tree_leaves(pshapes[1]))),
+                   cache_out=tuple(jax.tree_util.tree_leaves(pshapes[1])),
+                   scale_leaves=scale_leaves),
     ]
     if prefix:
         zero = jnp.asarray(0, jnp.int32)
@@ -159,10 +182,12 @@ def _step_targets(cfg, scfg, eng, *, prefix=False):
         targets += [
             StepTarget("set_index", sj, cache_cells=cells, vocab_size=vocab,
                        cache_in=cache_in,
-                       cache_out=tuple(jax.tree_util.tree_leaves(ss))),
+                       cache_out=tuple(jax.tree_util.tree_leaves(ss)),
+                       scale_leaves=scale_leaves),
             StepTarget("copy_page", cj, cache_cells=cells, vocab_size=vocab,
                        cache_in=cache_in,
-                       cache_out=tuple(jax.tree_util.tree_leaves(cs))),
+                       cache_out=tuple(jax.tree_util.tree_leaves(cs)),
+                       scale_leaves=scale_leaves),
         ]
     return targets
 
@@ -226,6 +251,7 @@ def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
     entry = {"serve": {"paged_kv": scfg.paged_kv,
                        "fused_sampling": scfg.fused_sampling,
                        "fill_bound": scfg.fill_bound,
+                       "kv_cache_dtype": scfg.kv_cache_dtype,
                        "prefix_cache": scfg.paged_kv and scfg.prefix_cache,
                        "max_seq": scfg.max_seq,
                        "max_slots": scfg.max_slots},
@@ -266,6 +292,8 @@ def _assert_schema(report, labels, *, trace_guard):
         entry = report["configs"].get(label)
         assert isinstance(entry, dict), (
             f"ANALYSIS.json schema: config {label!r} missing")
+        assert isinstance(entry["serve"].get("kv_cache_dtype"), str), (
+            f"ANALYSIS.json schema: {label}.serve.kv_cache_dtype missing")
         steps = ("decode", "prefill")
         if label == "paged_prefix":
             steps += ("set_index", "copy_page")
@@ -288,7 +316,7 @@ def _assert_schema(report, labels, *, trace_guard):
 
 
 def run(arch="qwen2-1.5b", *, json_out="ANALYSIS.json",
-        trace_guard=True) -> int:
+        trace_guard=True, kv_dtypes=("bfloat16",)) -> int:
     from jax import random
 
     from repro.analysis.jaxpr_lint import rule_catalog
@@ -299,7 +327,7 @@ def run(arch="qwen2-1.5b", *, json_out="ANALYSIS.json",
 
     cfg = get_config(arch, smoke=True)
     params = T.lm_init(Ctx(random.key(0)), cfg)
-    matrix = _matrix()
+    matrix = _matrix(kv_dtypes)
     report = {"arch": arch,
               "rules": dict(rule_catalog(),
                             **CHECK_CATALOG,
@@ -346,14 +374,20 @@ def _self_test(json_out) -> int:
 
     def bad_step(cache, logits):                     # transpose + vocab out
         jax.debug.print("x={}", cache.sum())         # host callback
-        return cache.swapaxes(1, 2), logits
+        # widening convert of a cache-sized int8 operand: the dequantized
+        # full-cache HBM copy the quant-scale rule exists to catch
+        wide = cache.astype(jnp.float32)
+        return cache.swapaxes(1, 2), logits, wide
     jaxpr, shapes = jax.make_jaxpr(bad_step, return_shape=True)(
-        jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.bfloat16),
+        jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.int8),
         jax.ShapeDtypeStruct((4, 512), jnp.float32))
     findings += run_rules(StepTarget(
         "seeded_step", jaxpr, cache_cells=4 * 4096 * 32, vocab_size=512,
-        cache_in=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.bfloat16),),
-        cache_out=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.float32),)))
+        cache_in=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.int8),
+                  jax.ShapeDtypeStruct((4, 4096, 1), jnp.bfloat16)),
+        cache_out=(jax.ShapeDtypeStruct((4, 4096, 1, 32), jnp.float32),
+                   jax.ShapeDtypeStruct((4, 4096, 1), jnp.bfloat16)),
+        scale_leaves=(1,)))                          # bf16 scale leaf
 
     race = KernelLaunch(
         name="seeded_kernel", grid=(4, 8),
@@ -374,8 +408,8 @@ def _self_test(json_out) -> int:
     fired = {f.rule for f in findings}
     expected = {"no-cache-sized-layout-ops", "no-vocab-sized-outputs",
                 "no-host-callbacks", "cache-dtype-stability",
-                "parallel-write-race", "vmem-budget", "scalar-prefetch",
-                "one-trace-per-step"}
+                "quant-scale-contract", "parallel-write-race",
+                "vmem-budget", "scalar-prefetch", "one-trace-per-step"}
     missing = expected - fired
     assert not missing, f"self-test: rules did not fire: {sorted(missing)}"
     report = {"arch": "self-test", "rules": {r: "seeded" for r in expected},
@@ -401,11 +435,17 @@ def main(argv=None) -> int:
     ap.add_argument("--self-test", action="store_true",
                     help="seed one violation per rule; exit non-zero iff "
                          "every rule fires")
+    ap.add_argument("--kv-dtype", nargs="+", default=["bfloat16"],
+                    choices=("bfloat16", "bf16", "int8", "fp8_e4m3"),
+                    help="KV cache dtypes to sweep: each quantized dtype "
+                         "adds kernel-on configs with an int8/fp8 pool "
+                         "plus fp32 scale leaves to the matrix")
     args = ap.parse_args(argv)
     if args.self_test:
         return _self_test(args.json_out)
     return run(args.arch, json_out=args.json_out,
-               trace_guard=not args.skip_trace_guard)
+               trace_guard=not args.skip_trace_guard,
+               kv_dtypes=tuple(args.kv_dtype))
 
 
 if __name__ == "__main__":

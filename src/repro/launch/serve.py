@@ -72,6 +72,12 @@ def main():
                          "archs only; errors otherwise)")
     ap.add_argument("--prefill-kv-block", type=int, default=512,
                     help="KV shard size for the prefill kernel grid")
+    ap.add_argument("--kv-dtype", default="bfloat16",
+                    choices=("bfloat16", "bf16", "int8", "fp8_e4m3"),
+                    help="KV-cache storage dtype. int8/fp8_e4m3 store "
+                         "quantized K/V with per-row fp32 scales; the "
+                         "serving kernels dequantize per-block in VMEM "
+                         "(~2x less cache HBM traffic for int8)")
     ap.add_argument("--no-fill-bound", action="store_true",
                     help="disable fill-bounded kernel grids (capacity-swept "
                          "KV walks — the pre-bounding A/B baseline)")
@@ -120,6 +126,7 @@ def main():
     if args.engine == "static":
         sess = ServeSession(
             cfg, ServeConfig(max_seq=args.prompt_len + args.steps + 8,
+                             kv_cache_dtype=args.kv_dtype,
                              decode_kernel=args.decode_kernel,
                              prefill_kernel=args.prefill_kernel,
                              prefill_kv_block=args.prefill_kv_block,
@@ -141,6 +148,7 @@ def main():
         return
 
     scfg = ServeConfig(max_seq=2 * (args.prompt_len + args.steps) + 8,
+                       kv_cache_dtype=args.kv_dtype,
                        prefill_chunk=args.prefill_chunk,
                        prefill_budget=args.prefill_budget,
                        max_slots=args.max_slots,

@@ -23,6 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, SHAPES, TrainConfig
 from repro.configs.registry import get_config
 from repro.distributed import sharding as SH
+from repro.kernels import cache_layout as CL
 from repro.models import transformer as T
 from repro.serve import engine as SE
 from repro.train import step as TS
@@ -219,8 +220,10 @@ def make_cell(arch_id: str, shape_name: str, mesh, *,
 
     abs_caches = jax.eval_shape(
         lambda: T.init_caches(cfg, global_batch, seq_len,
-                              kv_dtype=jnp.dtype(scfg.kv_cache_dtype)))
-    cache_sh = shardings_of(abs_caches, T.cache_axes(cfg))
+                              kv_dtype=CL.kv_cache_dtype(scfg.kv_cache_dtype)))
+    cache_sh = shardings_of(
+        abs_caches, T.cache_axes(
+            cfg, quantized=CL.kv_quantized(scfg.kv_cache_dtype)))
     p_sh = shardings_of(abstract_params, T.lm_axes(cfg))
 
     s_in = seq_len if kind == "prefill" else 1

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
+from repro.kernels import cache_layout as CL
 from repro.models import blocks as B
 from repro.models import frontends as F
 from repro.models import mamba as MB
@@ -150,17 +151,33 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
 # --------------------------------------------------------------- caches ----
 def init_caches(cfg: ModelConfig, batch: int, max_seq: int,
                 kv_dtype=jnp.bfloat16):
-    """Per-super-layer decode caches, stacked on a leading n_super dim."""
+    """Per-super-layer decode caches, stacked on a leading n_super dim.
+
+    ``kv_dtype`` accepts a dtype or a name from cache_layout.KV_DTYPES
+    ("bfloat16" / "int8" / "fp8_e4m3"). Quantized dtypes add per-row
+    fp32 ``k_scale``/``v_scale`` leaves (batch, max_seq, hkv) beside the
+    data — attention quantizes at write time and dequantizes per-block at
+    read time; bf16 caches carry no scale leaves and are byte-identical
+    to the pre-quantization layout."""
+    kv_dtype = CL.kv_cache_dtype(kv_dtype)
+    quant = CL.kv_quantized(kv_dtype)
+
     def one_super():
         c = {}
         for i, kind in enumerate(cfg.block_pattern):
             if kind in ("attn", "attn_moe", "global", "local"):
                 hkv, dk = cfg.n_kv_heads, cfg.head_dim_
-                c[f"b{i}"] = {"attn": {
+                attn = {
                     "k": jnp.zeros((batch, max_seq, hkv, dk), kv_dtype),
                     "v": jnp.zeros((batch, max_seq, hkv, dk), kv_dtype),
                     "index": jnp.zeros((batch,), jnp.int32),
-                }}
+                }
+                if quant:
+                    attn["k_scale"] = jnp.ones((batch, max_seq, hkv),
+                                               jnp.float32)
+                    attn["v_scale"] = jnp.ones((batch, max_seq, hkv),
+                                               jnp.float32)
+                c[f"b{i}"] = {"attn": attn}
             elif kind in ("mamba", "mamba_moe"):
                 c[f"b{i}"] = {"mamba": MB.mamba_cache_init(cfg, batch)}
             elif kind == "mlstm":
@@ -184,17 +201,30 @@ def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int,
     host-side page table (serve/scheduler.PagePool), passed to lm_apply as
     ``page_table`` — all layers fill in lockstep, so one table serves the
     whole stack. Attention-only: paged serving of recurrent state has no
-    meaning (their cache is O(1) per slot already)."""
+    meaning (their cache is O(1) per slot already).
+
+    Quantized ``kv_dtype`` (see init_caches) adds fp32 per-row scale pools
+    (num_pages, page_size, hkv) that ride the same page table — a page copy
+    (COW) or eviction moves data and scales together."""
+    kv_dtype = CL.kv_cache_dtype(kv_dtype)
+    quant = CL.kv_quantized(kv_dtype)
+
     def one_super():
         c = {}
         for i, kind in enumerate(cfg.block_pattern):
             if kind in ("attn", "attn_moe", "global", "local"):
                 hkv, dk = cfg.n_kv_heads, cfg.head_dim_
-                c[f"b{i}"] = {"attn": {
+                attn = {
                     "k": jnp.zeros((num_pages, page_size, hkv, dk), kv_dtype),
                     "v": jnp.zeros((num_pages, page_size, hkv, dk), kv_dtype),
                     "index": jnp.zeros((batch,), jnp.int32),
-                }}
+                }
+                if quant:
+                    attn["k_scale"] = jnp.ones((num_pages, page_size, hkv),
+                                               jnp.float32)
+                    attn["v_scale"] = jnp.ones((num_pages, page_size, hkv),
+                                               jnp.float32)
+                c[f"b{i}"] = {"attn": attn}
             else:
                 raise NotImplementedError(
                     f"paged KV caches cover attention blocks only "
@@ -240,9 +270,10 @@ def write_slot(caches, slot_caches, slot, length):
         if _is_index(path):
             return big.at[:, slot].set(jnp.asarray(length, big.dtype))
         one = one[:, 0].astype(big.dtype)            # (n_super, ...)
-        if getattr(path[-1], "key", None) in ("k", "v"):
+        if getattr(path[-1], "key", None) in ("k", "v", "k_scale", "v_scale"):
             keep = jnp.arange(one.shape[1]) < length
-            one = jnp.where(keep[None, :, None, None], one, 0)
+            one = jnp.where(
+                keep.reshape((1, -1) + (1,) * (one.ndim - 2)), one, 0)
         if one.shape == big.shape[:1] + big.shape[2:]:
             return big.at[:, slot].set(one)
         return big.at[:, slot, :one.shape[1]].set(one)
@@ -290,17 +321,22 @@ def copy_kv_page(caches, src, dst):
     return jax.tree_util.tree_map_with_path(cp, caches)
 
 
-def cache_axes(cfg: ModelConfig):
-    """Logical axes tree matching init_caches output."""
+def cache_axes(cfg: ModelConfig, *, quantized: bool = False):
+    """Logical axes tree matching init_caches output. ``quantized`` adds
+    the k_scale/v_scale rows a quantized-kv cache tree carries."""
     def one_super():
         c = {}
         for i, kind in enumerate(cfg.block_pattern):
             if kind in ("attn", "attn_moe", "global", "local"):
-                c[f"b{i}"] = {"attn": {
+                attn = {
                     "k": "layers,act_batch,act_kv_seq,act_kv_heads,",
                     "v": "layers,act_batch,act_kv_seq,act_kv_heads,",
                     "index": "layers,act_batch",
-                }}
+                }
+                if quantized:
+                    attn["k_scale"] = "layers,act_batch,act_kv_seq,act_kv_heads"
+                    attn["v_scale"] = "layers,act_batch,act_kv_seq,act_kv_heads"
+                c[f"b{i}"] = {"attn": attn}
             elif kind in ("mamba", "mamba_moe"):
                 c[f"b{i}"] = {"mamba": {
                     "conv": "layers,act_batch,,act_mlp",

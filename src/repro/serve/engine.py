@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.kernels import cache_layout as CL
 from repro.models import transformer as T
 from repro.serve import sampling as S
 from repro.serve.sampling import SamplingParams
@@ -114,7 +115,7 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             f"attention block (got {cfg.block_pattern} for {cfg.arch_id}): "
             "the per-slot sample positions are derived from the attention "
             "cache index. Pass fused_sampling=False to sample host-side.")
-    kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
+    kv_dtype = CL.kv_cache_dtype(scfg.kv_cache_dtype)
 
     def init_caches(batch: int):
         return T.init_caches(cfg, batch, scfg.max_seq, kv_dtype=kv_dtype)
@@ -380,7 +381,7 @@ class ContinuousBatchingEngine:
         self.params = params
         self.fused = scfg.fused_sampling
         self.default_sampling = default_sampling
-        kv_dtype = jnp.dtype(scfg.kv_cache_dtype)
+        kv_dtype = CL.kv_cache_dtype(scfg.kv_cache_dtype)
         self.paged = scfg.paged_kv
         if self.paged:
             # shared page pool: num_pages x page_size KV rows serve every

@@ -127,6 +127,15 @@ class PagePool:
         self.peak_reserved = 0
         self.cow_copies = 0                # pages privatized before a write
         self.evictions = 0                 # cached pages reclaimed for reuse
+        # Quantized-KV bookkeeping. A quantized pool stores per-row fp32
+        # scale leaves beside each K/V page (transformer.init_paged_caches);
+        # scales live and die WITH their page, so the pool tracks one bit
+        # per page: True while the page's scale rows are meaningful (mapped
+        # by a slot, or parked evictable with K/V + scales intact), False
+        # once the page returns to the free list. ``scale_copies`` counts
+        # device page copies (COW / fork) — each moves data AND scale rows.
+        self._scale_live = [False] * num_pages
+        self.scale_copies = 0
         self.prefix_hit_rows = 0           # KV rows served from the cache
         self.version = 0                   # bumped on every table mutation —
                                            # lets the engine keep a device
@@ -143,6 +152,14 @@ class PagePool:
     def cached_pages(self) -> int:
         """Evictable prefix-cache pages (refcount 0, K/V intact)."""
         return len(self._evictable)
+
+    @property
+    def live_scale_pages(self) -> int:
+        """Pages whose quantization-scale rows are meaningful right now
+        (pinned or evictable). Invariant: equals ``num_pages`` minus the
+        free-list length — scales are allocated and recycled with their
+        page, never separately."""
+        return sum(self._scale_live)
 
     @property
     def in_use(self) -> int:
@@ -189,7 +206,9 @@ class PagePool:
                 f"slot {slot}: allocation exceeds its new-page budget")
         self._outstanding[slot] -= 1
         if self._free:
-            return self._free.pop()
+            page = self._free.pop()
+            self._scale_live[page] = True
+            return page
         if self.evict == "fifo":
             page = min(self._evictable, key=self._seq.__getitem__)
             self._evictable.pop(page)
@@ -198,6 +217,7 @@ class PagePool:
         del self._index[self._page_key[page]]
         self._page_key[page] = None
         self.evictions += 1
+        self._scale_live[page] = True      # stays live across the handoff
         return page
 
     def _match_prefix(self, tokens) -> list[int]:
@@ -311,6 +331,7 @@ class PagePool:
                 self.table[slot, pi] = private
                 copies.append((page, private))
                 self.cow_copies += 1
+                self.scale_copies += 1     # device copy carries scale rows
         if copies and self.version == v0:
             self.version += 1
         return new, copies
@@ -384,6 +405,7 @@ class PagePool:
             self.table[dst, i] = private
             self._held[dst] = i + 1
             copies.append((int(self.table[src, i]), private))
+            self.scale_copies += 1         # eager tail copy moves scales too
         if self._held[dst]:
             self.version += 1
         self.peak_reserved = max(self.peak_reserved, self.reserved_pages)
@@ -405,6 +427,7 @@ class PagePool:
                     self._evictable[page] = self._page_key[page]
                 else:
                     self._free.append(page)
+                    self._scale_live[page] = False
         self.table[slot, :] = -1
         self._held[slot] = 0
         self._reserved[slot] = 0

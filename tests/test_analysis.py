@@ -11,8 +11,9 @@ import jax.numpy as jnp
 import pytest
 from jax import random
 
-from repro.analysis.jaxpr_lint import (LAYOUT_PRIMS, StepTarget,
-                                       cache_sized_ops, iter_eqns, run_rules,
+from repro.analysis.jaxpr_lint import (LAYOUT_PRIMS, QuantScaleContract,
+                                       StepTarget, cache_sized_ops,
+                                       iter_eqns, run_rules,
                                        vocab_sized_avals)
 from repro.analysis.kernel_contracts import (BlockInfo, KernelLaunch,
                                              capture_launches, check_launch,
@@ -60,7 +61,10 @@ def test_layout_rule_flags_each_prim_and_spares_small_ops():
     assert {prim for prim, _ in bad} == {"transpose", "pad",
                                          "convert_element_type"}
     findings = run_rules(StepTarget("s", jaxpr, cache_cells=CELLS))
-    assert _rules_fired(findings) == {"no-cache-sized-layout-ops"}
+    # the cache-sized WIDENING astype is double-flagged on purpose: it is
+    # both a layout materialization and a dequantized-full-cache HBM copy
+    assert _rules_fired(findings) == {"no-cache-sized-layout-ops",
+                                      "quant-scale-contract"}
     # raising the threshold above the cache size silences it
     assert not cache_sized_ops(jaxpr, CELLS * 8)
 
@@ -120,6 +124,47 @@ def test_dtype_stability_rule_flags_upcast_and_arity_change():
     assert _rules_fired(run_rules(arity)) == {"cache-dtype-stability"}
     assert not run_rules(StepTarget("s", jaxpr, cache_in=(CACHE,),
                                     cache_out=(CACHE,)))
+
+
+def test_quant_scale_rule_flags_nonf32_scales_and_widening_convert():
+    """Both violation halves of the quantized-KV contract: a scale leaf
+    stored below fp32 (dtype-stable, so only this rule sees it) and a
+    cache-sized widening convert — a dequantized full-cache HBM copy."""
+    jaxpr = jax.make_jaxpr(lambda x: x)(jnp.zeros((4,)))
+    qcache = jax.ShapeDtypeStruct(CACHE.shape, jnp.int8)
+    bad_scale = jax.ShapeDtypeStruct((4, 4096, 1), jnp.bfloat16)
+    t = StepTarget("s", jaxpr, cache_in=(qcache, bad_scale),
+                   cache_out=(qcache, bad_scale), scale_leaves=(1,))
+    findings = run_rules(t)
+    assert _rules_fired(findings) == {"quant-scale-contract"}
+    assert len(findings) == 2              # flagged on the way in AND out
+    # a widening astype over the whole quantized cache = dequant in HBM
+    wide = jax.make_jaxpr(lambda c: c.astype(jnp.float32))(qcache)
+    t = StepTarget("s", wide, cache_cells=CELLS)
+    assert "quant-scale-contract" in _rules_fired(run_rules(t))
+    # the quantize write direction (narrowing) is the sanctioned path
+    narrow = jax.make_jaxpr(
+        lambda c: c.astype(jnp.int8))(jnp.zeros(CACHE.shape, jnp.float32))
+    t = StepTarget("s", narrow, cache_cells=CELLS)
+    assert not QuantScaleContract().check(t)
+
+
+def test_quant_scale_rule_clean_on_real_int8_steps():
+    """The zero-findings half on a REAL quantized config: the engine's
+    decode + prefill jaxprs carry int8 K/V plus fp32 scale leaves and pass
+    every rule — per-block VMEM dequant never materializes a cache-sized
+    widened copy."""
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = T.lm_init(Ctx(random.key(0)), cfg)
+    scfg = analyze._matrix(("bfloat16", "int8"))["contig_fused_bounded_int8"]
+    assert scfg.kv_cache_dtype == "int8"
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    targets = list(analyze._step_targets(cfg, scfg, eng))
+    stepped = [t for t in targets if t.name in ("decode", "prefill")]
+    assert stepped and all(t.scale_leaves for t in stepped), (
+        "quantized step targets must carry scale-leaf indices")
+    for target in targets:
+        assert not run_rules(target), target.name
 
 
 def test_real_serving_steps_lint_clean():

@@ -80,6 +80,21 @@ def _check_invariants(pool: PagePool, num_pages: int, max_slots: int):
         assert len(o) <= pool._reserved[s], (
             f"slot {s} maps {len(o)} pages > reservation "
             f"{pool._reserved[s]}")
+    # quantized-KV scale bookkeeping: scale rows are allocated and recycled
+    # WITH their page, never separately — every page off the free list
+    # (mapped or evictable) holds exactly one live scale block, free pages
+    # hold none, and the aggregate matches the free-list complement
+    assert pool.live_scale_pages == num_pages - len(pool._free), (
+        f"scale leak: {pool.live_scale_pages} live scale pages != "
+        f"{num_pages} - {len(pool._free)} free")
+    for p in range(num_pages):
+        assert pool._scale_live[p] == (p not in free), (
+            f"page {p}: scale_live={pool._scale_live[p]} but "
+            f"free={p in free} — scales must ride their page")
+    # every COW privatization copied its scale rows along with the data
+    assert pool.scale_copies >= pool.cow_copies, (
+        f"{pool.cow_copies} cow copies but only {pool.scale_copies} "
+        "scale copies — a privatized page lost its scales")
 
 
 def _drive(pool: PagePool, num_pages: int, max_slots: int, page_size: int,
