@@ -37,6 +37,14 @@ Four measurements:
   after the first skips the shared rows' prefill entirely. Throughput
   counts *submitted* prompt tokens, so the warm speedup is user-visible
   tok/s, not an internal accounting trick.
+* **sharded** (``--mesh``) — the device-mesh family: engine decode tok/s
+  and one-chunk prefill tok/s at tp in {1, 2, 4} (tp=1 is the unsharded
+  reference on identical work), the ``long_500k`` decode step served from
+  a page pool spread over 4 sequence shards (each device resident for a
+  quarter of the pool), and per-step collective bytes parsed from the
+  compiled partitioned HLO — the measured form of the contract that
+  sharded serving moves only output-sized ConSmax partials, never the
+  cache. Needs tp * ns devices (forced host devices on CPU).
 * **kv_bytes** (every mode) — the quantized-KV claim: static cache bytes
   per resident token for bf16 vs int8 (per-row fp32 scale leaves counted
   against the int8 side), with the bf16/int8 ratio **asserted >= 1.5x**,
@@ -116,17 +124,20 @@ def _static_toks_per_s(cfg, params, reqs, max_seq):
 
 
 def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
-                           paged=False, fused=True, kv_dtype="bfloat16"):
+                           paged=False, fused=True, kv_dtype="bfloat16",
+                           tp=1, seq_shards=1):
     """``fused=False`` serves with the legacy host-sampling steps (logits
     shipped to the host per token) — the A/B baseline for the fused
-    in-step epilogue."""
+    in-step epilogue. ``tp``/``seq_shards`` > 1 serve from the sharded
+    engine (forced host devices on CPU)."""
     # prefix cache OFF: serve() runs the same queue twice (compile + timed),
     # so a warm second pass would measure the prefix cache instead of the
     # memory layout — the dedicated prefix_share rows measure that
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
                        decode_kernel=decode_kernel, paged_kv=paged,
                        page_size=8 if paged else 256, fused_sampling=fused,
-                       prefix_cache=False, kv_cache_dtype=kv_dtype)
+                       prefix_cache=False, kv_cache_dtype=kv_dtype,
+                       tp=tp, seq_shards=seq_shards)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     # the analysis-layer trace guard replaces the old ad-hoc cache_size
     # asserts: the whole benchmark workload — ragged admissions, decode,
@@ -154,7 +165,7 @@ def _continuous_toks_per_s(cfg, params, reqs, max_seq, slots, decode_kernel,
 
 
 def _prefill_step_tok_s(cfg, params, prefill_kernel, paged=False, chunk=8,
-                        max_seq=48, iters=20):
+                        max_seq=48, iters=20, tp=1):
     """Prompt tokens/s of ONE jitted append-prefill chunk step — the
     engine's actual compiled hot path (``ContinuousBatchingEngine._prefill``,
     jnp KV walk vs the fused consmax_prefill kernel), measured like the
@@ -165,7 +176,7 @@ def _prefill_step_tok_s(cfg, params, prefill_kernel, paged=False, chunk=8,
     least representative state. Best-of-N, like any microbenchmark."""
     scfg = ServeConfig(max_seq=max_seq, prefill_chunk=chunk, max_slots=4,
                        prefill_kernel=prefill_kernel, paged_kv=paged,
-                       page_size=chunk if paged else 256)
+                       page_size=chunk if paged else 256, tp=tp)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
     slot_i = 1
     slot = jnp.asarray(slot_i, jnp.int32)
@@ -269,6 +280,120 @@ def _paged_long_step(cfg, params, rows, report):
         report[f"long_500k_step_us{suffix}"] = us
     report["long_500k_cells"] = {"paged": total_cells,
                                  "contiguous": contiguous_cells}
+
+
+def _decode_collective_bytes(cfg, params, max_seq, slots, tp):
+    """Per-step collective bytes of the sharded fused decode step, from the
+    compiled partitioned HLO (trip counts included) — the traffic side of
+    the tensor-parallel claim: one output-sized ConSmax-partial psum plus
+    one head all_gather per layer, never anything cache-sized."""
+    from repro.analysis.collective_contract import step_collective_bytes
+    from repro.distributed.hlo_analysis import list_collectives
+    scfg = ServeConfig(max_seq=max_seq, prefill_chunk=8, max_slots=slots,
+                       decode_kernel=True, prefix_cache=False, tp=tp)
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    inputs = {"tokens": jnp.zeros((slots,), jnp.int32),
+              "active": jnp.ones((slots,), jnp.bool_)}
+    hlo = (eng._decode.lower(eng.params, eng.caches, inputs, eng.bank)
+           .compile().as_text())
+    return step_collective_bytes(list_collectives(hlo, num_devices=tp))
+
+
+def _sharded_long_step(cfg, params, seq_shards):
+    """One decode step of the long_500k shape from a page pool spread over
+    ``seq_shards`` devices — the memory point of sequence sharding: each
+    device holds ``num_pages / seq_shards`` pages, so the resident pool
+    can exceed one device's memory. Mirrors ``_paged_long_step`` (slot 0
+    at full 500k context) but builds the step through the mesh plan, with
+    in-step page-table localization, exactly as the engine wires it.
+    Returns (step_us, per-step collective bytes)."""
+    from repro.analysis.collective_contract import step_collective_bytes
+    from repro.distributed import serve_mesh as SM
+    from repro.distributed.hlo_analysis import list_collectives
+    L, _, _ = SHAPES["long_500k"]
+    max_slots, page_size = 4, 1024
+    pages_used = -(-L // page_size)
+    # thin headroom, rounded up so the pool splits evenly across shards
+    num_pages = -(-(pages_used + 8) // seq_shards) * seq_shards
+    assert num_pages * page_size < max_slots * L
+    scfg = ServeConfig(max_seq=L, max_slots=max_slots, paged_kv=True,
+                       page_size=page_size, num_pages=num_pages,
+                       fused_sampling=False, seq_shards=seq_shards)
+    plan = SM.plan_mesh(cfg, scfg)
+    _, _, decode_fn, _ = make_serve_fns(plan.cfg_local, scfg,
+                                        psum_axes=plan.psum_axes)
+
+    def body(params, caches, inputs):
+        inputs = dict(inputs, page_table=CL.localize_page_table(
+            inputs["page_table"], jax.lax.axis_index(SM.SEQ_AXIS),
+            plan.pages_per_shard))
+        return decode_fn(params, caches, inputs)
+
+    caches = T.init_paged_caches(cfg, max_slots, num_pages, page_size)
+    caches = _pin_index(caches, L - 1, slot=0)
+    pspec = plan.param_specs(params)
+    cspec = plan.cache_specs(caches, paged=True, quantized=False)
+    P0 = SM.P()
+    step = jax.jit(plan.wrap(body, (pspec, cspec, P0), (P0, cspec)))
+    params_s = plan.put(params, jax.tree.map(plan.named, pspec))
+    caches = plan.put(caches, jax.tree.map(plan.named, cspec))
+    table = np.full((max_slots, pages_used), -1, np.int32)
+    table[0, :] = np.arange(pages_used)
+    active = np.zeros((max_slots,), bool)
+    active[0] = True
+    inputs = {"tokens": jnp.zeros((max_slots, 1), jnp.int32),
+              "active": jnp.asarray(active),
+              "page_table": jnp.asarray(table)}
+    us = bench_wall(step, params_s, caches, inputs, iters=2, warmup=1)
+    hlo = step.lower(params_s, caches, inputs).compile().as_text()
+    colls = step_collective_bytes(
+        list_collectives(hlo, num_devices=plan.tp * plan.seq_shards))
+    return us, colls, num_pages // seq_shards
+
+
+def _sharded_rows(arch, rows, report):
+    """The ``sharded`` family: decode/prefill tok/s at tp in {1, 2, 4}
+    (the tp=1 row is the unsharded reference on identical work), the
+    long_500k step on a sequence-sharded pool, and per-step collective
+    bytes from the compiled partitioned programs."""
+    if jax.device_count() < 4:
+        raise SystemExit(
+            f"--mesh needs 4 devices, have {jax.device_count()}. On CPU: "
+            "export XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "before jax initializes.")
+    # smoke configs default to one KV head, which tp > 1 cannot divide
+    cfg = get_config(arch, smoke=True, n_kv_heads=4)
+    params = T.lm_init(Ctx(random.key(0)), cfg)
+    sh = report["sharded"] = {}
+    reqs = _workload(random.key(21), 6, cfg.vocab_size)
+    for tp in (1, 2, 4):
+        tps, _, _ = _continuous_toks_per_s(cfg, params, reqs, 48, 4, True,
+                                           tp=tp)
+        pf, pf_us = _prefill_step_tok_s(cfg, params, True, chunk=128,
+                                        max_seq=1024, iters=5, tp=tp)
+        rows.append((f"serve/sharded_decode_tp{tp}_tok_s", f"{tps:.1f}",
+                     "continuous;split_kv;fused_sampling"))
+        rows.append((f"serve/sharded_prefill_tp{tp}_tok_s", f"{pf:.1f}",
+                     f"chunk=128;L=1024;step={pf_us:.0f}us"))
+        sh[f"decode_tok_s_tp{tp}"] = tps
+        sh[f"prefill_tok_s_tp{tp}"] = pf
+        if tp > 1:
+            colls = _decode_collective_bytes(cfg, params, 48, 4, tp)
+            rows.append((f"serve/sharded_decode_tp{tp}_collective_bytes",
+                         f"{colls['total_bytes']}",
+                         ";".join(f"{k}={v}" for k, v
+                                  in sorted(colls["bytes_by_kind"].items()))
+                         or "none"))
+            sh[f"decode_collective_bytes_tp{tp}"] = colls["total_bytes"]
+    ns = 4
+    us, colls, per_shard = _sharded_long_step(cfg, params, ns)
+    rows.append((f"serve/sharded_long500k_step_ns{ns}_us", f"{us:.0f}",
+                 f"pages_per_shard={per_shard};"
+                 f"collective_bytes={colls['total_bytes']}"))
+    sh["long_500k_step_us_seqsharded"] = us
+    sh["long_500k_collective_bytes"] = colls["total_bytes"]
+    sh["long_500k_seq_shards"] = ns
+    sh["long_500k_pages_per_shard"] = per_shard
 
 
 def _kv_bytes_per_token(cfg, kv_dtype, batch=8, max_seq=4096):
@@ -382,6 +507,27 @@ def _prefix_share_rows(cfg, params, rows, report):
     report["prefix_share"]["share90_speedup_vs_share0"] = speedup
 
 
+def _assert_sharded_schema(report):
+    num = (int, float)
+    sh = report.get("sharded")
+    assert isinstance(sh, dict), (
+        "BENCH_serve.json schema: 'sharded' family missing in --mesh")
+    for tp in (1, 2, 4):
+        for k in (f"decode_tok_s_tp{tp}", f"prefill_tok_s_tp{tp}"):
+            assert isinstance(sh.get(k), num), (
+                f"BENCH_serve.json schema: sharded[{k!r}] missing — the "
+                "tp sweep is part of the artifact")
+    for tp in (2, 4):
+        assert isinstance(sh.get(f"decode_collective_bytes_tp{tp}"), int), (
+            f"BENCH_serve.json schema: sharded decode collective bytes "
+            f"missing for tp={tp}")
+    for k in ("long_500k_step_us_seqsharded", "long_500k_collective_bytes",
+              "long_500k_seq_shards", "long_500k_pages_per_shard"):
+        assert isinstance(sh.get(k), num), (
+            f"BENCH_serve.json schema: sharded[{k!r}] missing — the "
+            "seq-sharded long_500k step is part of the artifact")
+
+
 def _assert_schema(report, batches, cache_lens, step_batches, paged):
     """The CI artifact contract: a refactor that silently drops a key (or
     writes a non-numeric value) fails the benchmark run instead of
@@ -447,7 +593,7 @@ def _assert_schema(report, batches, cache_lens, step_batches, paged):
                     f"BENCH_serve.json schema: page_occupancy[{k!r}] missing")
 
 
-def run(arch="qwen2-1.5b", *, full=False, paged=False,
+def run(arch="qwen2-1.5b", *, full=False, paged=False, mesh=False,
         json_out="BENCH_serve.json"):
     cfg = get_config(arch, smoke=True)
     params = T.lm_init(Ctx(random.key(0)), cfg)
@@ -564,7 +710,13 @@ def run(arch="qwen2-1.5b", *, full=False, paged=False,
 
     # ---- prefix sharing: warm-admission tok/s + TTFT, every mode ----
     _prefix_share_rows(cfg, params, rows, report)
+
+    # ---- sharded: mesh tp sweep + seq-sharded long_500k (--mesh) ----
+    if mesh:
+        _sharded_rows(arch, rows, report)
     _assert_schema(report, batches, cache_lens, step_batches, paged)
+    if mesh:
+        _assert_sharded_schema(report)
     if json_out:
         with open(json_out, "w") as f:
             json.dump(report, f, indent=2, sort_keys=True)
@@ -582,8 +734,14 @@ if __name__ == "__main__":
                     help="paged-KV rows: paged vs contiguous engine tok/s "
                          "+ occupancy, and one long_500k decode step on a "
                          "page pool smaller than max_slots x max_seq cells")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sharded rows: decode/prefill tok/s at tp 1/2/4, "
+                         "the long_500k step on a seq-sharded pool, and "
+                         "per-step collective bytes from the partitioned "
+                         "HLO (needs forced host devices on CPU)")
     ap.add_argument("--json-out", default="BENCH_serve.json",
                     help="machine-readable report path ('' disables)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(args.arch, full=args.full, paged=args.paged, json_out=args.json_out)
+    run(args.arch, full=args.full, paged=args.paged, mesh=args.mesh,
+        json_out=args.json_out)

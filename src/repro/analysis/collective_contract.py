@@ -1,0 +1,88 @@
+"""Sharded-serving collective contract: the only cross-device traffic a
+serving step may carry is output-sized.
+
+The sharded engine's numeric contract (distributed.serve_mesh) allows
+exactly two collectives per model step, both sized like the attention
+*output*, never like the KV cache:
+
+* one fp32 ``psum`` (all-reduce) of per-head ConSmax partials over the
+  "seq" axis — the split-KV addition, ~``b * H * dk * 4`` bytes;
+* one ``all_gather`` of per-head outputs over the "model" axis — disjoint
+  heads reassembled by concatenation, ~``b * H * dk * 4`` bytes.
+
+Anything cache-sized crossing the wire means sharding went wrong: a
+cache-sized **all-gather** is a shard rematerializing the whole KV pool
+(the exact thing sequence sharding exists to avoid); a cache-sized
+**all-to-all** is a resharding shuffle of pool pages; a cache-sized
+**all-reduce** is a partial-sum combine of something that should have
+stayed local. The ``sharded-collective-contract`` rule walks the compiled
+partitioned program (``distributed.hlo_analysis.list_collectives``, trip
+counts included) and fires one :class:`Finding` per offending op.
+
+The threshold is the *per-shard* cache byte size: every legitimate
+collective on the step is orders of magnitude below it (output-sized
+fp32, a few KB), and every cache leak is at or above it.
+"""
+from __future__ import annotations
+
+from repro.analysis.jaxpr_lint import Finding
+from repro.distributed.hlo_analysis import list_collectives
+
+RULE = "sharded-collective-contract"
+
+CONTRACT_CATALOG = {
+    RULE: "sharded steps move only output-sized collectives (the ConSmax "
+          "partial psum + the head all_gather) — no cache-sized "
+          "all-gather/all-to-all/all-reduce",
+}
+
+
+def cache_bytes_per_shard(cfg, scfg) -> int:
+    """Per-shard KV cache footprint in bytes — the contract threshold.
+
+    The pool shards over KV heads ("model", factor tp) and pages ("seq",
+    factor seq_shards), so one shard holds ``cells / (tp * ns)`` elements.
+    Element size is the storage dtype's (1 byte for int8/fp8 codes — the
+    quantized pool's scale leaves are strictly smaller and need no
+    separate threshold)."""
+    hkv_dk = cfg.n_kv_heads * cfg.head_dim_
+    if scfg.paged_kv:
+        cells = scfg.num_pages * scfg.page_size * hkv_dk
+    else:
+        cells = scfg.max_slots * scfg.max_seq * hkv_dk
+    esize = 1 if scfg.kv_cache_dtype in ("int8", "fp8_e4m3") else 2
+    return cells * esize // max(scfg.tp * scfg.seq_shards, 1)
+
+
+def check_collectives(target: str, hlo: str, *, cache_bytes: int,
+                      num_devices: int) -> tuple[list[dict], list[Finding]]:
+    """Inventory a compiled sharded step's collectives and flag any whose
+    payload reaches ``cache_bytes``. Returns ``(ops, findings)`` — the ops
+    list (kind / bytes / group / multiplicity) feeds the per-step
+    collective-bytes accounting in ANALYSIS.json and BENCH_serve.json."""
+    ops = list_collectives(hlo, num_devices=num_devices)
+    findings = []
+    for op in ops:
+        if op["bytes"] >= cache_bytes:
+            findings.append(Finding(
+                RULE, target,
+                f"cache-sized {op['kind']}: {op['bytes']} bytes moved "
+                f"across {op['group_size']} devices (threshold "
+                f"{cache_bytes} = one shard's KV cache) — sharded serving "
+                "must keep the cache resident and exchange only "
+                "output-sized ConSmax partials",
+                detail=(op["kind"], op["bytes"], op["group_size"],
+                        op["multiplicity"])))
+    return ops, findings
+
+
+def step_collective_bytes(ops: list[dict]) -> dict:
+    """Aggregate an op inventory to per-step totals (multiplicity-weighted
+    bytes by kind + overall) for the benchmark/analysis artifacts."""
+    by_kind: dict[str, int] = {}
+    for op in ops:
+        by_kind[op["kind"]] = (by_kind.get(op["kind"], 0)
+                               + op["bytes"] * max(op["multiplicity"], 1))
+    return {"bytes_by_kind": by_kind,
+            "total_bytes": sum(by_kind.values()),
+            "count": len(ops)}

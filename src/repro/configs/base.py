@@ -198,6 +198,31 @@ class ServeConfig:
                                      # pages when the free list runs dry:
                                      # "lru" (release order) | "fifo"
                                      # (registration order)
+    # --- device mesh (distributed/serve_mesh.py) ---
+    tp: int = 1                      # tensor-parallel shards along the
+                                     # "model" mesh axis: KV heads (and the
+                                     # q/o head projections + per-head
+                                     # ConSmax beta/gamma) split across
+                                     # devices; per-shard partials combine
+                                     # by ONE output-sized fp32 psum (no
+                                     # log-sum-exp rescale — ConSmax has no
+                                     # denominator)
+    seq_shards: int = 1              # page-pool shards along the "seq" mesh
+                                     # axis: physical pages spread across
+                                     # devices (shard d owns the contiguous
+                                     # block [d*P/ns, (d+1)*P/ns)), slot page
+                                     # position j always backed by shard
+                                     # j // ceil(maxpps/ns) — a request
+                                     # within one block stays whole-shard
+                                     # (token bit-identity: foreign shards
+                                     # contribute exact +0.0 partials), a
+                                     # longer one spills block by block so
+                                     # long_500k spreads its pages. Requires
+                                     # paged_kv + fill_bound (each shard's
+                                     # kernels skip non-local pages via the
+                                     # -1 holes in its localized table,
+                                     # which only fill-bounded grids gate
+                                     # on)
 
     def __post_init__(self):
         # invalid shapes fail HERE, not deep inside _append_cache_write /
@@ -258,10 +283,39 @@ class ServeConfig:
                 raise ValueError(
                     f"ServeConfig: prefix_evict must be 'lru' or 'fifo', "
                     f"got {self.prefix_evict!r}")
+        if self.tp < 1 or self.seq_shards < 1:
+            raise ValueError(
+                f"ServeConfig: tp ({self.tp}) and seq_shards "
+                f"({self.seq_shards}) must be >= 1")
+        if self.seq_shards > 1:
+            if not self.paged_kv:
+                raise ValueError(
+                    f"ServeConfig: seq_shards ({self.seq_shards}) > 1 "
+                    "requires paged_kv — only the page pool has a device "
+                    "dimension to shard (contiguous caches replicate)")
+            if not self.fill_bound:
+                raise ValueError(
+                    f"ServeConfig: seq_shards ({self.seq_shards}) > 1 "
+                    "requires fill_bound — a shard's localized page table "
+                    "holds -1 for non-local pages, and only the "
+                    "fill-bounded kernel grids gate their compute on "
+                    "table entries >= 0 (the capacity-swept paths clamp "
+                    "-1 to page 0 and would read another slot's data)")
+            if self.num_pages % self.seq_shards:
+                raise ValueError(
+                    f"ServeConfig: seq_shards ({self.seq_shards}) must "
+                    f"divide num_pages ({self.num_pages}) — pages shard "
+                    "into equal contiguous per-device blocks")
 
     @property
     def max_pages_per_slot(self) -> int:
         return -(-self.max_seq // self.page_size)
+
+    @property
+    def mesh_shape(self) -> tuple:
+        """(tp, seq_shards) — the ("model", "seq") device mesh the sharded
+        serving steps run on; (1, 1) means single-device (no shard_map)."""
+        return (self.tp, self.seq_shards)
 
 
 SHAPES = {

@@ -211,7 +211,8 @@ def _append_cache_write(cache, new, index):
 
 
 def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
-             norm_params, window=0, softcap=0.0, merged=True):
+             norm_params, window=0, softcap=0.0, merged=True,
+             block_valid=None):
     """Shared KV walk behind append_attention / paged_attention: a (b, c)
     query chunk at per-slot positions index + [0, c) attends cache blocks
     j = 0..hi, where ``gather(j) -> (k_blk, v_blk)`` yields the
@@ -220,7 +221,13 @@ def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
     through a page table. Each query row attends causally to rows
     < index + lengths. For consmax the loop carry is the output accumulator
     alone (each block's partial is final); softmax/softermax carry the
-    online (m, l) rescale state across blocks."""
+    online (m, l) rescale state across blocks.
+
+    ``block_valid(j) -> (b,) bool`` (optional) marks slots whose block j
+    holds NO real rows — e.g. a -1 page-table entry, which under sequence
+    sharding means "another shard owns this page", not just "unmapped tail".
+    Invalid blocks are masked out entirely (the gather may have clamped
+    them onto arbitrary real data)."""
     b, c, H, dk = q.shape
     g = H // hkv
     qg = q.reshape(b, c, hkv, g, dk)
@@ -238,6 +245,8 @@ def _kv_walk(q, index, lengths, gather, hi, kc, hkv, *, norm_kind,
         # the one serving mask formula, shared with the Pallas kernels
         msk = kv_mask(qpos[:, :, None], kpos[None, None, :],
                       kv_len[:, None, None], window)          # (b, c, kc)
+        if block_valid is not None:
+            msk &= block_valid(j)[:, None, None]
         return s, v_blk.astype(cdt), msk
 
     if norm_kind == "consmax":
@@ -375,7 +384,13 @@ def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
 
     ``k_scale``/``v_scale``: (P, ps, hkv) fp32 scale pools for quantized
     page pools — each gathered page is dequantized page-at-a-time (the
-    round-trip the Pallas kernel performs in VMEM)."""
+    round-trip the Pallas kernel performs in VMEM).
+
+    Unmapped entries (-1) are clamped to page 0 by the gather but their
+    whole block is masked via ``block_valid`` — under sequence sharding a
+    shard's localized table holds -1 for every page another shard owns
+    *mid-fill*, where the kv_len bound alone would not exclude page 0's
+    (foreign) rows."""
     ps = kp.shape[1]
     hi = jnp.max(-(-(index + lengths) // ps))                # dynamic bound
 
@@ -389,7 +404,8 @@ def paged_attention(q, kp, vp, page_table, index, lengths, *, norm_kind,
 
     return _kv_walk(q, index, lengths, gather, hi, ps, kp.shape[2],
                     norm_kind=norm_kind, norm_params=norm_params,
-                    window=window, softcap=softcap, merged=merged)
+                    window=window, softcap=softcap, merged=merged,
+                    block_valid=lambda j: page_table[:, j] >= 0)
 
 
 # ---------------------------------------------------- decode attention ----
@@ -436,7 +452,7 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
                     decode_kernel: bool = False, decode_kv_block: int = 256,
                     prefill_kernel: bool = False, prefill_kv_block: int = 512,
                     fill_bound: bool = True, prefill_append=None,
-                    decode_active=None, page_table=None):
+                    decode_active=None, page_table=None, psum_axes=()):
     """Self- or cross-attention over x: (b, s, d).
 
     cache: None (train/prefill) or dict(k, v, index) for one-token decode.
@@ -467,6 +483,17 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
     shared (num_pages, page_size, hkv, dk) pools and each slot's logical
     rows live on the pages its table row maps (-1 = unmapped). Applies to
     the chunked-prefill and one-token decode cache paths only.
+    psum_axes: ("model", "seq") mesh axis pair for sharded serving under
+    shard_map; empty = single-device, no collective. The combine runs on
+    the per-head outputs BEFORE the o-projection: KV shards ("seq", pages
+    split) sum by one output-sized fp32 psum — ConSmax partials carry no
+    denominator or running max, so cross-shard combine is the same pure
+    addition the split-KV kernel uses — while head shards ("model") are
+    reassembled by one output-sized all_gather (disjoint heads: pure
+    concatenation, bitwise exact). The o-projection weight is REPLICATED
+    and applied full-width on every shard, so the einsum sees operands
+    bit-identical to the single-device step. These two output-sized
+    collectives are the only cross-device traffic on the serving path.
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -709,6 +736,22 @@ def attention_apply(p, x, cfg: ModelConfig, *, kind: str = "global",
             if ks_cache is not None:
                 new_cache.update(k_scale=ks_cache, v_scale=vs_cache)
 
+    if psum_axes:
+        model_axis, seq_axis = psum_axes
+        # KV ("seq") shards: per-head ConSmax partials combine by the same
+        # fp32 addition the split-KV kernel uses — no log-sum-exp exchange,
+        # no rescale. Under the block position map a slot whose pages fit
+        # one shard sees exactly +0.0 from every other shard, so the sum
+        # returns the owner's bits unchanged.
+        out = jax.lax.psum(out.astype(jnp.float32), seq_axis)
+        # Head ("model") shards own DISJOINT heads — there is nothing to
+        # add. Reassemble the full head axis by concatenation (pure data
+        # movement, bitwise exact) and apply the FULL o-projection on every
+        # shard: the einsum then sees operands bit-identical to the
+        # single-device step, so its result is too. (Summing per-shard
+        # o-projection partials instead — the megatron-style combine —
+        # reassociates the K contraction and is NOT bit-identical.)
+        out = jax.lax.all_gather(out, model_axis, axis=-2, tiled=True)
     out = L.heads_out(p["o"], out, dtype=cdt)
     out = shard(out, "act_batch,act_seq,act_embed")
     return out, new_cache

@@ -135,42 +135,26 @@ def _group_size(line: str, num_devices: int) -> int:
     return num_devices
 
 
-def collective_stats(hlo: str, *, link_bw: float,
-                     num_devices: int) -> CollectiveStats:
+def _iter_collectives(hlo: str, *, num_devices: int) -> list:
+    """Walk the call graph and return one ``(kind, shape_part, line, mult,
+    group_size)`` tuple per collective instruction, with ``mult`` the
+    executed multiplicity (trip counts of enclosing ``while`` loops)."""
     comps, entry = _split_computations(hlo)
-    stats = CollectiveStats()
     if entry is None:
         entry = "__all__"
         comps["__all__"] = [l.strip() for l in hlo.splitlines()]
+    found: list = []
 
     def walk(comp: str, mult: float, depth: int):
         if comp not in comps or depth > 16:
             return
         for ln in comps[comp]:
-            kind = None
-            shape_part = None
             for k in _COLL_KINDS:
                 m = re.search(rf"=\s*(.*?)\s*{k}(?:-start)?\(", ln)
                 if m:
-                    kind, shape_part = k, m.group(1)
+                    found.append((k, m.group(1), ln, mult,
+                                  _group_size(ln, num_devices)))
                     break
-            if kind is not None:
-                out_b = shape_bytes(shape_part, unknown=stats.unknown_dtypes)
-                n = _group_size(ln, num_devices)
-                frac = (n - 1) / n if n > 1 else 0.0
-                if kind == "all-reduce":
-                    b_eff, t = out_b, 2 * out_b * frac / link_bw
-                elif kind == "all-gather":
-                    b_eff, t = out_b, out_b * frac / link_bw
-                elif kind == "reduce-scatter":
-                    b_eff, t = out_b * n, out_b * n * frac / link_bw
-                elif kind == "all-to-all":
-                    b_eff, t = out_b, out_b * frac / link_bw
-                else:
-                    b_eff, t = out_b, out_b / link_bw
-                stats.bytes_by_kind[kind] += int(b_eff * mult)
-                stats.count_by_kind[kind] += max(int(mult), 1)
-                stats.seconds += t * mult
             if " while(" in ln:
                 tm = _TRIP_RE.search(ln)
                 body = cond = None
@@ -189,6 +173,48 @@ def collective_stats(hlo: str, *, link_bw: float,
                         walk(cm.group(2), mult, depth + 1)
 
     walk(entry, 1.0, 0)
+    return found
+
+
+def list_collectives(hlo: str, *, num_devices: int) -> list[dict]:
+    """Per-op collective inventory of a partitioned program.
+
+    One entry per collective instruction: ``kind``, ``bytes`` (the payload
+    a ring model moves — output bytes, except reduce-scatter which counts
+    its input), ``group_size``, ``multiplicity``, and the defining ``op``
+    text (truncated). The serving collective contract
+    (``analysis.collective_contract``) consumes this to flag cache-sized
+    traffic on a sharded step."""
+    ops = []
+    for kind, shape_part, ln, mult, n in _iter_collectives(
+            hlo, num_devices=num_devices):
+        out_b = shape_bytes(shape_part)
+        payload = out_b * n if kind == "reduce-scatter" else out_b
+        ops.append({"kind": kind, "bytes": int(payload), "group_size": n,
+                    "multiplicity": int(mult), "op": ln.strip()[:200]})
+    return ops
+
+
+def collective_stats(hlo: str, *, link_bw: float,
+                     num_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for kind, shape_part, _ln, mult, n in _iter_collectives(
+            hlo, num_devices=num_devices):
+        out_b = shape_bytes(shape_part, unknown=stats.unknown_dtypes)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-reduce":
+            b_eff, t = out_b, 2 * out_b * frac / link_bw
+        elif kind == "all-gather":
+            b_eff, t = out_b, out_b * frac / link_bw
+        elif kind == "reduce-scatter":
+            b_eff, t = out_b * n, out_b * n * frac / link_bw
+        elif kind == "all-to-all":
+            b_eff, t = out_b, out_b * frac / link_bw
+        else:
+            b_eff, t = out_b, out_b / link_bw
+        stats.bytes_by_kind[kind] += int(b_eff * mult)
+        stats.count_by_kind[kind] += max(int(mult), 1)
+        stats.seconds += t * mult
     return stats
 
 

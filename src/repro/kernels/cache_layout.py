@@ -187,6 +187,42 @@ def consmax_weights(s, beta, gamma, merged: bool):
     return jnp.exp(s - beta) / gamma
 
 
+# ------------------------------------------------ sequence-sharded pages ----
+# Under ServeConfig.seq_shards = ns > 1 the paged pool's P axis is split into
+# ns contiguous per-device blocks: shard d owns physical pages
+# [d * P/ns, (d+1) * P/ns). The host allocator is position-rigid with a BLOCK
+# position map (slot page position j is always backed by a page owned by
+# shard j // ceil(max_pages_per_slot/ns) — serve/scheduler.PagePool explains
+# why that preserves token bit-identity where an interleave cannot), the
+# engine keeps ONE global page table, and each shard localizes it inside
+# shard_map: entries it owns become local indices into its pool slice,
+# everything else becomes -1 — the same "unmapped" sentinel mid-fill holes
+# already use, which the fill-bounded kernels (and the jnp walk's
+# block-validity mask) gate on.
+
+
+def page_shard(page: int, pages_per_shard: int) -> int:
+    """Owning shard of physical page ``page`` (host-side allocator math)."""
+    return page // pages_per_shard
+
+
+def position_shard(pos: int, position_block: int, seq_shards: int) -> int:
+    """Shard that must back slot page position ``pos``: block map with
+    ``position_block = ceil(max_pages_per_slot / seq_shards)`` positions
+    per shard — a request within one block stays whole-shard (bit-identical
+    psum), a longer one spills block by block across the "seq" axis."""
+    return min(pos // position_block, seq_shards - 1)
+
+
+def localize_page_table(table, shard, pages_per_shard: int):
+    """Global page table -> this shard's local view: owned entries become
+    indices into the shard's pool slice, non-owned (and already -1) entries
+    become -1. Identity when the pool is unsharded (shard 0 owns all P
+    pages). ``shard`` may be traced (``lax.axis_index`` inside shard_map)."""
+    owned = (table >= 0) & (table // pages_per_shard == shard)
+    return jnp.where(owned, table - shard * pages_per_shard, -1)
+
+
 # --------------------------------------------------- quantized KV cache ----
 # The serving caches may store K/V below bf16 (ServeConfig.kv_cache_dtype):
 # decode is HBM-bandwidth-bound, so int8/fp8 KV halves the bytes the KV walk

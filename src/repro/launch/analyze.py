@@ -5,6 +5,16 @@ violation.
     PYTHONPATH=src python -m repro.launch.analyze              # the CI gate
     PYTHONPATH=src python -m repro.launch.analyze --skip-trace-guard  # fast
     PYTHONPATH=src python -m repro.launch.analyze --self-test  # rules fire?
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.analyze --mesh   # sharded gate
+
+``--mesh`` switches to the sharded matrix: tp/seq-shard serve configs whose
+prefill and decode steps are lowered to *compiled partitioned* HLO and
+checked against the ``sharded-collective-contract`` rule — the only
+cross-device traffic a sharded step may carry is the output-sized ConSmax
+partial psum and the head all_gather; any cache-sized all-gather /
+all-to-all / all-reduce fails the gate (the cache must stay resident). The
+per-step collective-byte inventory lands in the JSON artifact.
 
 For every registered serve config — {contiguous, paged} x {fused sampling,
 legacy logits} x {fill-bounded, capacity-swept}, all with both serving
@@ -94,6 +104,24 @@ def _matrix(kv_dtypes=("bfloat16",)):
                 prefill_kernel=True, kv_cache_dtype=dt, paged_kv=paged,
                 page_size=_PAGE, score_norm="consmax")
     return out
+
+
+def _mesh_matrix():
+    """Sharded serve configs for the ``--mesh`` gate: tensor-parallel
+    contiguous, tensor-parallel + sequence-sharded paged, and a
+    sequence-sharded quantized pool — the three traffic shapes the
+    collective contract must hold for."""
+    from repro.configs.base import ServeConfig
+    base = dict(max_seq=_MAX_SEQ, prefill_chunk=_CHUNK, max_slots=_MAX_SLOTS,
+                decode_kernel=True, prefill_kernel=True, score_norm="consmax")
+    return {
+        "sharded_contig_fused_tp2": ServeConfig(**base, tp=2),
+        "sharded_paged_fused_2x2": ServeConfig(
+            **base, paged_kv=True, page_size=_PAGE, tp=2, seq_shards=2),
+        "sharded_paged_int8_1x4": ServeConfig(
+            **base, paged_kv=True, page_size=_PAGE, kv_cache_dtype="int8",
+            seq_shards=4),
+    }
 
 
 def _cache_threshold(cfg, scfg, step: str) -> int:
@@ -279,6 +307,145 @@ def analyze_config(label, cfg, params, scfg, *, trace_guard=True):
     return entry, findings
 
 
+def analyze_mesh_config(label, cfg, params, scfg, *, trace_guard=True):
+    """One sharded serve config through the collective contract: lower the
+    engine's jitted prefill and decode steps to compiled partitioned HLO,
+    inventory every collective (trip counts included), and fail any whose
+    payload reaches one shard's KV-cache byte size. Optionally drives the
+    mixed workload under the TraceGuard — the mesh wrapping must preserve
+    one compiled shape per step."""
+    import jax.numpy as jnp
+
+    from repro.analysis.collective_contract import (cache_bytes_per_shard,
+                                                    check_collectives,
+                                                    step_collective_bytes)
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    eng = ContinuousBatchingEngine(cfg, scfg, params)
+    b = scfg.max_slots
+    ndev = scfg.tp * scfg.seq_shards
+    thresh = cache_bytes_per_shard(cfg, scfg)
+    inputs = {"active": jnp.ones((b,), jnp.bool_),
+              "tokens": jnp.zeros((b,) if scfg.fused_sampling else (b, 1),
+                                  jnp.int32)}
+    table = None
+    if scfg.paged_kv:
+        table = jnp.full((b, scfg.max_pages_per_slot), -1, jnp.int32)
+        inputs["page_table"] = table
+    dargs = (eng.params, eng.caches, inputs,
+             eng.bank if scfg.fused_sampling else None)
+    pargs = (eng.params, eng.caches, jnp.asarray(0, jnp.int32),
+             jnp.zeros((1, scfg.prefill_chunk), jnp.int32),
+             jnp.asarray([scfg.prefill_chunk], jnp.int32), eng.bank,
+             table[:1] if table is not None else None)
+
+    findings = []
+    entry = {"serve": {"tp": scfg.tp, "seq_shards": scfg.seq_shards,
+                       "paged_kv": scfg.paged_kv,
+                       "kv_cache_dtype": scfg.kv_cache_dtype,
+                       "fused_sampling": scfg.fused_sampling},
+             "steps": {}, "trace_guard": None}
+    for name, fn, fargs in (("decode", eng._decode, dargs),
+                            ("prefill", eng._prefill, pargs)):
+        hlo = fn.lower(*fargs).compile().as_text()
+        ops, cf = check_collectives(f"{label}.{name}", hlo,
+                                    cache_bytes=thresh, num_devices=ndev)
+        findings.extend(cf)
+        entry["steps"][name] = {
+            "cache_bytes_per_shard": thresh,
+            "collectives": step_collective_bytes(ops),
+            "findings": [f.to_json() for f in cf]}
+    if trace_guard:
+        counts, tg = _trace_guard_findings(cfg, eng)
+        findings.extend(tg)
+        entry["trace_guard"] = {"counts": counts,
+                                "findings": [f.to_json() for f in tg]}
+    return entry, findings
+
+
+def _assert_mesh_schema(report, labels, *, trace_guard):
+    for key, typ in (("arch", str), ("rules", dict), ("configs", dict),
+                     ("violations", int), ("findings", list)):
+        assert isinstance(report.get(key), typ), (
+            f"mesh analysis schema: missing/mistyped {key!r}")
+    assert "sharded-collective-contract" in report["rules"], (
+        "mesh analysis schema: contract rule missing from catalog")
+    for label in labels:
+        entry = report["configs"].get(label)
+        assert isinstance(entry, dict), (
+            f"mesh analysis schema: config {label!r} missing")
+        for k in ("tp", "seq_shards"):
+            assert isinstance(entry["serve"].get(k), int), (
+                f"mesh analysis schema: {label}.serve.{k} missing")
+        for step in ("decode", "prefill"):
+            sd = entry["steps"].get(step)
+            assert isinstance(sd, dict), (
+                f"mesh analysis schema: {label}.steps[{step!r}] missing")
+            assert isinstance(sd.get("collectives", {}).get("total_bytes"),
+                              int), (
+                f"mesh analysis schema: {label}.steps[{step!r}] lacks "
+                "collective bytes")
+        if trace_guard:
+            assert isinstance(entry.get("trace_guard"), dict), (
+                f"mesh analysis schema: {label}.trace_guard missing")
+
+
+def run_mesh(arch="qwen2-1.5b", *, json_out="ANALYSIS_mesh.json",
+             trace_guard=True) -> int:
+    """The ``--mesh`` gate: sharded configs against the collective
+    contract (plus the TraceGuard's one-shape invariant). Needs tp * ns
+    devices — on CPU, forced host devices (see the module docstring)."""
+    import jax
+    from jax import random
+
+    from repro.analysis.collective_contract import CONTRACT_CATALOG
+    from repro.configs.registry import get_config
+    from repro.models import transformer as T
+    from repro.nn.module import Ctx
+
+    matrix = _mesh_matrix()
+    need = max(s.tp * s.seq_shards for s in matrix.values())
+    if jax.device_count() < need:
+        raise SystemExit(
+            f"analyze --mesh needs {need} devices, have "
+            f"{jax.device_count()}. On CPU: export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} "
+            "before jax initializes.")
+    # smoke configs default to one KV head, which tp=2 cannot divide
+    cfg = get_config(arch, smoke=True, n_kv_heads=4)
+    params = T.lm_init(Ctx(random.key(0)), cfg)
+    report = {"arch": arch,
+              "rules": dict(CONTRACT_CATALOG,
+                            **{"one-trace-per-step":
+                               "one compiled shape serves every fill level "
+                               "and slot count"}),
+              "configs": {}, "violations": 0, "findings": []}
+    all_findings = []
+    for label, scfg in matrix.items():
+        entry, findings = analyze_mesh_config(label, cfg, params, scfg,
+                                              trace_guard=trace_guard)
+        report["configs"][label] = entry
+        for f in findings:
+            all_findings.append(dict(f.to_json(), config=label))
+        bytes_ = {s: d["collectives"]["total_bytes"]
+                  for s, d in entry["steps"].items()}
+        status = "FAIL" if findings else "ok"
+        print(f"analyze --mesh {label:28s} {status}  collective bytes "
+              f"{bytes_}" + (f"  ({len(findings)} findings)"
+                             if findings else ""))
+        for f in findings:
+            print(f"  [{f.rule}] {f.target}: {f.message}")
+    report["findings"] = all_findings
+    report["violations"] = len(all_findings)
+    _assert_mesh_schema(report, matrix.keys(), trace_guard=trace_guard)
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"analyze --mesh: wrote {json_out} "
+              f"({report['violations']} violations)")
+    return 1 if all_findings else 0
+
+
 def _assert_schema(report, labels, *, trace_guard):
     """The CI artifact contract (same idiom as BENCH_serve.json): a
     refactor that drops a config, a step, a kernel launch, or the rule
@@ -405,11 +572,27 @@ def _self_test(json_out) -> int:
     retrace(jnp.zeros((3,)))                         # second shape = retrace
     findings += guard.findings()
 
+    # a cache-sized all-gather in a partitioned program: the sharded
+    # collective contract must flag a shard rematerializing the pool
+    from repro.analysis.collective_contract import check_collectives
+    fake_hlo = """\
+HloModule seeded
+
+ENTRY %main (p0: bf16[4,65536]) -> bf16[16,65536] {
+  %p0 = bf16[4,65536] parameter(0)
+  ROOT %ag = bf16[16,65536] all-gather(bf16[4,65536] %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+}
+"""
+    _, cf = check_collectives("seeded_sharded", fake_hlo,
+                              cache_bytes=1 << 20, num_devices=4)
+    findings += cf
+
     fired = {f.rule for f in findings}
     expected = {"no-cache-sized-layout-ops", "no-vocab-sized-outputs",
                 "no-host-callbacks", "cache-dtype-stability",
                 "quant-scale-contract", "parallel-write-race",
-                "vmem-budget", "scalar-prefetch", "one-trace-per-step"}
+                "vmem-budget", "scalar-prefetch", "one-trace-per-step",
+                "sharded-collective-contract"}
     missing = expected - fired
     assert not missing, f"self-test: rules did not fire: {sorted(missing)}"
     report = {"arch": "self-test", "rules": {r: "seeded" for r in expected},
@@ -440,9 +623,19 @@ def main(argv=None) -> int:
                     help="KV cache dtypes to sweep: each quantized dtype "
                          "adds kernel-on configs with an int8/fp8 pool "
                          "plus fp32 scale leaves to the matrix")
+    ap.add_argument("--mesh", action="store_true",
+                    help="sharded gate: compile tp/seq-shard serve steps "
+                         "and fail any cache-sized collective (needs "
+                         "forced host devices on CPU; writes "
+                         "ANALYSIS_mesh.json by default)")
     args = ap.parse_args(argv)
     if args.self_test:
         return _self_test(args.json_out)
+    if args.mesh:
+        out = (args.json_out if args.json_out != "ANALYSIS.json"
+               else "ANALYSIS_mesh.json")
+        return run_mesh(args.arch, json_out=out,
+                        trace_guard=not args.skip_trace_guard)
     return run(args.arch, json_out=args.json_out,
                trace_guard=not args.skip_trace_guard,
                kv_dtypes=tuple(args.kv_dtype))

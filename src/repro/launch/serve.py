@@ -7,6 +7,9 @@ dry-run validates).
         --requests 12 --max-slots 4 --decode-kernel
     PYTHONPATH=src python -m repro.launch.serve --engine continuous \
         --temperature 0.8 --top-k 50 --top-p 0.95 --seed 7
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.serve --engine continuous \
+        --paged --decode-kernel --mesh 2x4
 
 ``--engine static`` runs the lockstep ServeSession; ``--engine continuous``
 runs the slot-recycling ContinuousBatchingEngine over a queue of requests
@@ -35,6 +38,10 @@ import time
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--kv-heads", type=int, default=0,
+                    help="override n_kv_heads (0 = arch default). Smoke "
+                         "configs default to 1 KV head, which --tp > 1 "
+                         "cannot divide — pass e.g. 4 for mesh runs")
     ap.add_argument("--engine", choices=("static", "continuous"),
                     default="static")
     ap.add_argument("--batch", type=int, default=4)
@@ -101,7 +108,26 @@ def main():
                     help="reclaim order for refcount-0 cached pages when "
                          "the free list runs dry: lru = release order, "
                          "fifo = registration order")
+    # mesh knobs (continuous engine only)
+    ap.add_argument("--mesh", default="",
+                    help="device mesh as TPxNS, e.g. 2x4 = tp 2, seq-shards "
+                         "4 (shorthand for --tp/--seq-shards; needs tp*ns "
+                         "devices — on CPU export XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel shards: attention heads (and the "
+                         "KV caches' head axis) split across the 'model' "
+                         "mesh axis; must divide n_heads and n_kv_heads")
+    ap.add_argument("--seq-shards", type=int, default=1,
+                    help="sequence shards: paged pool pages split across "
+                         "the 'seq' mesh axis in per-position blocks "
+                         "(requires --paged; num_pages must divide evenly)")
     args = ap.parse_args()
+    if args.mesh:
+        try:
+            args.tp, args.seq_shards = map(int, args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh must be TPxNS, got {args.mesh!r}")
 
     import dataclasses
 
@@ -114,7 +140,9 @@ def main():
     from repro.serve.engine import ContinuousBatchingEngine, ServeSession
     from repro.serve.sampling import SamplingParams
 
-    cfg = get_config(args.arch, smoke=True)
+    cfg = get_config(args.arch, smoke=True,
+                     **({"n_kv_heads": args.kv_heads} if args.kv_heads
+                        else {}))
     if cfg.frontend != "tokens":
         raise SystemExit(f"{args.arch}: embedding-frontend serving demo is "
                          "exercised by the dry-run decode cells")
@@ -124,6 +152,10 @@ def main():
     fused = not args.host_sampling
 
     if args.engine == "static":
+        if args.tp * args.seq_shards > 1:
+            raise SystemExit("--mesh/--tp/--seq-shards require --engine "
+                             "continuous (the static session is the "
+                             "single-device A/B reference)")
         sess = ServeSession(
             cfg, ServeConfig(max_seq=args.prompt_len + args.steps + 8,
                              kv_cache_dtype=args.kv_dtype,
@@ -161,8 +193,16 @@ def main():
                        paged_kv=args.paged, page_size=args.page_size,
                        num_pages=args.num_pages,
                        prefix_cache=not args.no_prefix_cache,
-                       prefix_evict=args.prefix_evict)
+                       prefix_evict=args.prefix_evict,
+                       tp=args.tp, seq_shards=args.seq_shards)
     eng = ContinuousBatchingEngine(cfg, scfg, params)
+    if eng.plan is not None:
+        print(f"[serve/continuous] mesh: tp={args.tp} x "
+              f"seq_shards={args.seq_shards} over "
+              f"{args.tp * args.seq_shards} devices "
+              f"({eng.plan.cfg_local.n_heads} heads/shard"
+              + (f", {eng.plan.pages_per_shard} pages/shard"
+                 if args.paged else "") + ")")
     rng = random.key(1)
     uids = []
     for i in range(args.requests):

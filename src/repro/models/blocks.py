@@ -123,7 +123,8 @@ def block_apply(p, x, cfg: ModelConfig, kind: str, *, positions=None,
                 cache=None, cond=None, merged=False, q_chunk=2048,
                 kv_chunk=1024, decode_kernel=False, decode_kv_block=256,
                 prefill_kernel=False, prefill_kv_block=512, fill_bound=True,
-                prefill_append=None, decode_active=None, page_table=None):
+                prefill_append=None, decode_active=None, page_table=None,
+                psum_axes=()):
     """Returns (x, new_cache, aux_losses)."""
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -139,7 +140,8 @@ def block_apply(p, x, cfg: ModelConfig, kind: str, *, positions=None,
             decode_kv_block=decode_kv_block, prefill_kernel=prefill_kernel,
             prefill_kv_block=prefill_kv_block, fill_bound=fill_bound,
             prefill_append=prefill_append,
-            decode_active=decode_active, page_table=page_table)
+            decode_active=decode_active, page_table=page_table,
+            psum_axes=psum_axes)
         if cfg.post_block_norm:
             h = L.norm_apply(p["attn_post_norm"], h, kind=cfg.norm)
         x = x + h

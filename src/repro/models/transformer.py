@@ -48,7 +48,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
              logits_index=None, decode_kernel=False, decode_kv_block=256,
              prefill_kernel=False, prefill_kv_block=512, fill_bound=True,
              prefill_append=None, decode_active=None, page_table=None,
-             logits_epilogue=None):
+             logits_epilogue=None, psum_axes=()):
     """Forward pass.
 
     tokens: (b, s) int ids (token frontend) | embeds: (b, s, d) stub frontends.
@@ -71,6 +71,11 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
     page_table: (b, max_pages) int32 — paged KV serving: attention caches
     are shared page pools (see init_paged_caches) and each slot's logical
     rows live on the pages its table row maps.
+    psum_axes: mesh axis names for sharded serving under shard_map — each
+    attention block all-reduces its per-shard ConSmax output partial over
+    these axes (see attention_apply); everything outside attention runs
+    replicated, so logits (and fused sampling) are identical on every
+    device. Empty = single-device.
     logits_epilogue: callable ``(logits, new_caches) -> out`` fused into
     the same computation in place of the logits return — the serving hook
     (serve/sampling.sample_tokens) that turns the jitted prefill/decode
@@ -103,7 +108,7 @@ def lm_apply(p, cfg: ModelConfig, *, tokens=None, embeds=None, cond=None,
                 prefill_kernel=prefill_kernel,
                 prefill_kv_block=prefill_kv_block, fill_bound=fill_bound,
                 prefill_append=prefill_append, decode_active=decode_active,
-                page_table=page_table)
+                page_table=page_table, psum_axes=psum_axes)
             aux = aux + a
             if cache_in is not None:
                 new_caches[f"b{i}"] = co
@@ -321,13 +326,51 @@ def copy_kv_page(caches, src, dst):
     return jax.tree_util.tree_map_with_path(cp, caches)
 
 
-def cache_axes(cfg: ModelConfig, *, quantized: bool = False):
-    """Logical axes tree matching init_caches output. ``quantized`` adds
-    the k_scale/v_scale rows a quantized-kv cache tree carries."""
+def copy_kv_page_local(caches, src, dst, shard, pages_per_shard: int):
+    """``copy_kv_page`` for a sequence-sharded pool, running per-shard
+    inside shard_map: ``src``/``dst`` are *global* page ids; the shard
+    owning them (the position-rigid allocator guarantees COW/fork copies
+    never cross shards — replacement pages come from the same slot
+    position's shard) rewrites its local slice, every other shard performs
+    a no-op self-copy (same traced structure on all devices, no
+    collectives). ``shard`` may be ``lax.axis_index``."""
+    owned = (src // pages_per_shard == shard) & (dst // pages_per_shard == shard)
+    src_l = jnp.where(owned, src - shard * pages_per_shard, 0)
+    dst_l = jnp.where(owned, dst - shard * pages_per_shard, 0)
+
+    def cp(path, a):
+        if _is_index(path):
+            return a
+        page = jnp.where(owned, a[:, src_l], a[:, dst_l])
+        return a.at[:, dst_l].set(page)
+    return jax.tree_util.tree_map_with_path(cp, caches)
+
+
+def cache_axes(cfg: ModelConfig, *, quantized: bool = False,
+               paged: bool = False):
+    """Logical axes tree matching init_caches (or, with ``paged=True``,
+    init_paged_caches) output. ``quantized`` adds the k_scale/v_scale rows
+    a quantized-kv cache tree carries — scale leaves share their row
+    leaves' axis names minus the trailing dk axis, so any mesh rule that
+    shards the rows shards the scales identically (a page's fp32 scales
+    must live on the device holding its int8/fp8 codes). Paged pools name
+    their page axis ``act_kv_pages`` — the axis sequence sharding spreads
+    across the "seq" mesh devices."""
     def one_super():
         c = {}
         for i, kind in enumerate(cfg.block_pattern):
             if kind in ("attn", "attn_moe", "global", "local"):
+                if paged:
+                    attn = {
+                        "k": "layers,act_kv_pages,,act_kv_heads,",
+                        "v": "layers,act_kv_pages,,act_kv_heads,",
+                        "index": "layers,act_batch",
+                    }
+                    if quantized:
+                        attn["k_scale"] = "layers,act_kv_pages,,act_kv_heads"
+                        attn["v_scale"] = "layers,act_kv_pages,,act_kv_heads"
+                    c[f"b{i}"] = {"attn": attn}
+                    continue
                 attn = {
                     "k": "layers,act_batch,act_kv_seq,act_kv_heads,",
                     "v": "layers,act_batch,act_kv_seq,act_kv_heads,",

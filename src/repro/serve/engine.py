@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ServeConfig
+from repro.distributed import serve_mesh as SM
 from repro.kernels import cache_layout as CL
 from repro.models import transformer as T
 from repro.serve import sampling as S
@@ -73,8 +74,14 @@ def _attention_only(cfg: ModelConfig) -> bool:
                for k in cfg.block_pattern)
 
 
-def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
+def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig, *, psum_axes=()):
     """Returns (init_caches, prefill_step, decode_step, prefill_ragged).
+
+    ``psum_axes``: mesh axis names for sharded serving — the steps are
+    then per-shard bodies meant to run under shard_map with ``cfg`` the
+    per-shard view (serve_mesh.MeshPlan.cfg_local), and every attention
+    block all-reduces its ConSmax output partial over these axes (one
+    output-sized fp32 psum; see core.attention.attention_apply).
 
     With ``scfg.fused_sampling`` (the default) every step takes a trailing
     ``sampling`` argument — the SoA parameter bank from
@@ -138,7 +145,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             params, cfg, caches=caches, merged=True,
             positions=jnp.arange(s)[None, :], logits_slice=slice(-1, None),
             logits_epilogue=_epilogue(sampling) if fused else None,
-            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
+            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
+            psum_axes=psum_axes, **kw)
         return (out if fused else out[:, -1]), caches
 
     def prefill_ragged(params, caches, batch_inputs, lengths, sampling=None):
@@ -153,7 +161,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             prefill_kv_block=scfg.prefill_kv_block,
             fill_bound=scfg.fill_bound,
             logits_epilogue=_epilogue(sampling) if fused else None,
-            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk, **kw)
+            q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
+            psum_axes=psum_axes, **kw)
         return (out if fused else out[:, 0]), caches
 
     def decode_step(params, caches, batch_inputs, sampling=None):
@@ -176,7 +185,8 @@ def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig):
             fill_bound=scfg.fill_bound,
             decode_active=batch_inputs.get("active"),
             page_table=batch_inputs.get("page_table"),
-            logits_epilogue=_epilogue(sampling) if fused else None, **kw)
+            logits_epilogue=_epilogue(sampling) if fused else None,
+            psum_axes=psum_axes, **kw)
         if not fused:
             return out[:, -1], caches
         active = batch_inputs.get("active")
@@ -383,14 +393,24 @@ class ContinuousBatchingEngine:
         self.default_sampling = default_sampling
         kv_dtype = CL.kv_cache_dtype(scfg.kv_cache_dtype)
         self.paged = scfg.paged_kv
+        # device-mesh plan: None when tp = seq_shards = 1 (single device —
+        # the engine's original code paths, bit for bit); otherwise every
+        # jitted step below is shard_map-wrapped over the plan's mesh and
+        # each attention block ends in ONE output-sized psum combining the
+        # per-shard ConSmax partials (see distributed/serve_mesh)
+        self.plan = plan = SM.plan_mesh(cfg, scfg)
+        mcfg = cfg if plan is None else plan.cfg_local
+        psum = plan.psum_axes if plan is not None else ()
         if self.paged:
             # shared page pool: num_pages x page_size KV rows serve every
             # slot; the host-side PagePool maps (slot, logical page) ->
             # pool page and gates admission on worst-case reservations
+            # (per-shard reservations under sequence sharding)
             self.pool = PagePool(scfg.num_pages, scfg.page_size,
                                  scfg.max_slots, scfg.max_pages_per_slot,
                                  prefix_cache=scfg.prefix_cache,
-                                 evict=scfg.prefix_evict)
+                                 evict=scfg.prefix_evict,
+                                 seq_shards=scfg.seq_shards)
             self.scheduler = Scheduler(scfg.max_slots, scfg.max_seq,
                                        page_pool=self.pool)
             self.caches = T.init_paged_caches(
@@ -432,6 +452,13 @@ class ContinuousBatchingEngine:
             row at lengths-1 (only meaningful for a prompt's final chunk,
             with the slot's own bank row sliced inside the step); legacy:
             returns that row's logits."""
+            if plan is not None and paged:
+                # per-shard view of the global table row: owned entries
+                # become local pool indices, foreign pages become the -1
+                # holes the fill-bounded kernels skip (identity at ns=1)
+                page_row = CL.localize_page_table(
+                    page_row, jax.lax.axis_index(SM.SEQ_AXIS),
+                    plan.pages_per_shard)
             def take(path, a):
                 if paged and not T._is_index(path):
                     return a                  # shared pool: consumed whole
@@ -446,13 +473,13 @@ class ContinuousBatchingEngine:
                     return S.sample_tokens(logits[:, -1], row,
                                            T.cache_index(new_caches))
             out, slot_caches, _ = T.lm_apply(
-                params, cfg, tokens=tokens, caches=slot_caches, merged=True,
+                params, mcfg, tokens=tokens, caches=slot_caches, merged=True,
                 prefill_append=lengths, logits_index=lengths[0] - 1,
                 prefill_kernel=scfg.prefill_kernel,
                 prefill_kv_block=scfg.prefill_kv_block,
                 fill_bound=scfg.fill_bound,
                 q_chunk=scfg.q_chunk, kv_chunk=scfg.kv_chunk,
-                page_table=page_row, logits_epilogue=epi)
+                page_table=page_row, logits_epilogue=epi, psum_axes=psum)
             def put(path, big, one):
                 if paged and not T._is_index(path):
                     return one                # shared pool: scatter updated
@@ -462,23 +489,74 @@ class ContinuousBatchingEngine:
                                                       slot_caches)
             return (out if fused else out[:, 0]), caches
 
-        _, _, decode_step, _ = make_serve_fns(cfg, scfg)
+        _, _, decode_fn, _ = make_serve_fns(mcfg, scfg, psum_axes=psum)
+
+        def decode_step(params, caches, batch_inputs, sampling=None):
+            if plan is not None and paged:
+                batch_inputs = dict(
+                    batch_inputs,
+                    page_table=CL.localize_page_table(
+                        batch_inputs["page_table"],
+                        jax.lax.axis_index(SM.SEQ_AXIS),
+                        plan.pages_per_shard))
+            return decode_fn(params, caches, batch_inputs, sampling)
+
+        reset_fn = T.reset_slot_paged if self.paged else T.reset_slot
+        if plan is None:
+            copy_fn = T.copy_kv_page
+        else:
+            def copy_fn(caches, src, dst):
+                return T.copy_kv_page_local(
+                    caches, src, dst, jax.lax.axis_index(SM.SEQ_AXIS),
+                    plan.pages_per_shard)
+
         # the engine rebinds self.caches to each result immediately, so the
         # cache pool buffer is donated — prefill/decode/reset update the
         # n_layers x max_slots x max_seq K/V rows (or the shared page pool)
         # in place instead of copying per call (donation is a no-op on CPU
         # smoke runs)
-        self._prefill = jax.jit(prefill_chunk_step, donate_argnums=(1,))
-        self._decode = jax.jit(decode_step, donate_argnums=(1,))
-        self._reset = jax.jit(
-            T.reset_slot_paged if self.paged else T.reset_slot,
-            donate_argnums=(0,))
+        if plan is None:
+            prefill_w, decode_w, reset_w = (prefill_chunk_step, decode_step,
+                                            reset_fn)
+            index_w, copy_w = T.set_slot_index, copy_fn
+        else:
+            # shard_map every step body: params over the head rules, cache
+            # leaves over hkv ("model") / pages ("seq"), everything else —
+            # tokens, slots, tables, sampling banks — replicated (P()
+            # prefixes broadcast over dict/None subtrees). The mesh, specs
+            # and wrapping are fixed HERE, once, so the one-compiled-shape-
+            # per-lifetime invariant is untouched.
+            pspec = plan.param_specs(params)
+            cspec = plan.cache_specs(
+                self.caches, paged=self.paged,
+                quantized=CL.kv_quantized(kv_dtype))
+            self._cache_spec = cspec
+            P0 = SM.P()
+            prefill_w = plan.wrap(
+                prefill_chunk_step,
+                (pspec, cspec, P0, P0, P0, P0, P0), (P0, cspec))
+            decode_w = plan.wrap(decode_step,
+                                 (pspec, cspec, P0, P0), (P0, cspec))
+            reset_w = plan.wrap(reset_fn, (cspec, P0), cspec)
+            index_w = plan.wrap(T.set_slot_index, (cspec, P0, P0), cspec)
+            copy_w = plan.wrap(copy_fn, (cspec, P0, P0), cspec)
+            # donation needs inputs already laid out like the outputs:
+            # place params/caches and the device-resident sampling state
+            # on the mesh before the first step runs
+            self.params = plan.put(params, jax.tree.map(plan.named, pspec))
+            self.caches = plan.put(self.caches,
+                                   jax.tree.map(plan.named, cspec))
+            self.bank = plan.put(self.bank, plan.replicated)
+            self._last = plan.put(self._last, plan.replicated)
+        self._prefill = jax.jit(prefill_w, donate_argnums=(1,))
+        self._decode = jax.jit(decode_w, donate_argnums=(1,))
+        self._reset = jax.jit(reset_w, donate_argnums=(0,))
         if self.paged:
             # warm-admission index pin + COW page copy: the device half of
             # the allocator's prefix-sharing bookkeeping, one compiled
             # variant each for the engine's lifetime
-            self._set_index = jax.jit(T.set_slot_index, donate_argnums=(0,))
-            self._copy_page = jax.jit(T.copy_kv_page, donate_argnums=(0,))
+            self._set_index = jax.jit(index_w, donate_argnums=(0,))
+            self._copy_page = jax.jit(copy_w, donate_argnums=(0,))
         else:
             self._set_index = self._copy_page = None
 
@@ -601,7 +679,11 @@ class ContinuousBatchingEngine:
         mutations (the common case: one token, no new page) reuse the
         resident buffer instead of paying a host transfer per token."""
         if self._table_version != self.pool.version:
-            self._table_dev = jnp.asarray(self.pool.table)
+            table = jnp.asarray(self.pool.table)
+            if self.plan is not None:
+                # GLOBAL table, replicated: each shard localizes it in-step
+                table = self.plan.put(table, self.plan.replicated)
+            self._table_dev = table
             self._table_version = self.pool.version
         return self._table_dev
 
@@ -686,7 +768,7 @@ class ContinuousBatchingEngine:
             if self.paged:
                 inputs["page_table"] = self._device_table()
             logits, self.caches = self._decode(self.params, self.caches,
-                                               inputs)
+                                               inputs, None)
             rows = np.asarray([slot for slot, _ in decoding])
             pos = jnp.asarray([st.filled + len(st.generated)
                                for _, st in decoding], jnp.int32)

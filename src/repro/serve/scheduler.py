@@ -95,20 +95,63 @@ class PagePool:
       freed or evicted while its refcount > 0,
     * a slot never maps more pages than its reservation,
     * ``version`` strictly increases, at most once per mutating call.
+
+    Sequence sharding (``seq_shards = ns > 1``): the device pool's page
+    axis is split into ns contiguous per-device blocks — shard d owns
+    physical pages [d * P/ns, (d+1) * P/ns) — and allocation is
+    *position-rigid* with a BLOCK position map: slot page position j is
+    always backed by a page from shard ``j // ceil(maxpps/ns)`` (maxpps
+    = max_pages_per_slot). The block map, rather than an interleave, is
+    what preserves the engine's token bit-identity guarantee: a request
+    whose context fits one block (up to ``max_seq/ns`` rows) has ALL its
+    pages on one shard, every other shard's ConSmax partial for it is
+    exactly +0.0 (masked weights), and the cross-device psum returns the
+    owner's fp32 bits unchanged — no reassociated additions. Only a
+    request that outgrows a block (the long_500k single-slot shape this
+    axis exists for) spreads onto further shards, spending bit-identity
+    for capacity: its resident pages then exceed one device's memory by
+    design, and its partial sums regroup per shard count (documented in
+    README "Sharded serving").
+
+    Position-rigidity still buys the other invariants: COW/fork
+    replacement pages (same position) stay on the source page's shard
+    (device page copies never cross shards), and prefix-cache hits
+    (always positions 0..k) attach consistently for every sharer. All
+    capacity accounting — admission gates, eviction, ``submit``'s
+    unservable check — is per-shard: a request that fits globally but
+    overflows one shard's slice must NOT admit (it could never map its
+    position-j pages; under the block map the low shards are the
+    contended ones, since every slot's first block lands on shard 0).
+    ns=1 reduces bit-exactly to the unsharded allocator (same
+    allocation order, same gates).
     """
 
     def __init__(self, num_pages: int, page_size: int, max_slots: int,
                  max_pages_per_slot: int, prefix_cache: bool = True,
-                 evict: str = "lru"):
+                 evict: str = "lru", seq_shards: int = 1):
         if evict not in ("lru", "fifo"):
             raise ValueError(f"evict must be 'lru' or 'fifo', got {evict!r}")
+        if seq_shards < 1 or num_pages % seq_shards:
+            raise ValueError(
+                f"seq_shards ({seq_shards}) must be >= 1 and divide "
+                f"num_pages ({num_pages})")
         self.num_pages = num_pages
         self.page_size = page_size
         self.max_pages_per_slot = max_pages_per_slot
         self.prefix_cache = prefix_cache
         self.evict = evict
+        self.seq_shards = seq_shards
+        self.pages_per_shard = num_pages // seq_shards
+        # logical page positions [d*block, (d+1)*block) live on shard d
+        self.position_block = -(-max_pages_per_slot // seq_shards)
         self.table = np.full((max_slots, max_pages_per_slot), -1, np.int32)
-        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        # per-shard free lists, descending ids so pop() hands out each
+        # shard's smallest id first (ns=1: identical order to the old
+        # single list — 0, 1, 2, ...)
+        ppd = self.pages_per_shard
+        self._free_by: list[list[int]] = [
+            list(range((d + 1) * ppd - 1, d * ppd - 1, -1))
+            for d in range(seq_shards)]
         self.refcount = [0] * num_pages    # table rows mapping each page
         self._page_key: list[bytes | None] = [None] * num_pages
         self._index: dict[bytes, int] = {}     # chain key -> page id
@@ -119,10 +162,13 @@ class PagePool:
         self._seqno = 0
         self._held = [0] * max_slots       # pages currently mapped per slot
         self._reserved = [0] * max_slots   # worst-case pages per slot
-        # remaining *new-page* allocation rights per slot: decremented on
-        # every fresh alloc (including COW copies). Admission gates on the
-        # sum of these, not on _reserved — shared pages are free capacity.
-        self._outstanding = [0] * max_slots
+        # remaining *new-page* allocation rights per slot, PER SHARD:
+        # decremented on every fresh alloc (including COW copies) against
+        # the allocating position's shard. Admission gates on the per-shard
+        # sums, not on _reserved — shared pages are free capacity, and a
+        # request must fit every shard's slice, not just the global total.
+        self._outstanding: list[list[int]] = [
+            [0] * seq_shards for _ in range(max_slots)]
         self.peak_in_use = 0
         self.peak_reserved = 0
         self.cow_copies = 0                # pages privatized before a write
@@ -142,11 +188,29 @@ class PagePool:
                                            # copy and re-upload only on change
 
     # ------------------------------------------------------------ stats ----
+    def page_shard(self, page: int) -> int:
+        """Shard owning physical page ``page``."""
+        return page // self.pages_per_shard
+
+    def position_shard(self, pos: int) -> int:
+        """Shard that must back slot page position ``pos`` (block map —
+        see the class docstring's bit-identity rationale)."""
+        return min(pos // self.position_block, self.seq_shards - 1)
+
+    def free_pages_by_shard(self, d: int) -> int:
+        """Pages shard ``d`` can allocate right now: its free list plus
+        its evictable prefix-cache pages."""
+        return len(self._free_by[d]) + sum(
+            1 for p in self._evictable if self.page_shard(p) == d)
+
+    def outstanding_by_shard(self, d: int) -> int:
+        return sum(o[d] for o in self._outstanding)
+
     @property
     def free_pages(self) -> int:
-        """Pages allocatable right now: the free list plus the evictable
+        """Pages allocatable right now: the free lists plus the evictable
         prefix-cache pages (refcount 0; reclaimed on demand)."""
-        return len(self._free) + len(self._evictable)
+        return sum(len(f) for f in self._free_by) + len(self._evictable)
 
     @property
     def cached_pages(self) -> int:
@@ -157,7 +221,7 @@ class PagePool:
     def live_scale_pages(self) -> int:
         """Pages whose quantization-scale rows are meaningful right now
         (pinned or evictable). Invariant: equals ``num_pages`` minus the
-        free-list length — scales are allocated and recycled with their
+        free-lists' length — scales are allocated and recycled with their
         page, never separately."""
         return sum(self._scale_live)
 
@@ -180,9 +244,9 @@ class PagePool:
     @property
     def outstanding_pages(self) -> int:
         """New-page allocation rights still held by live reservations —
-        the quantity admission actually gates on: pinned + outstanding
-        can never exceed ``num_pages``."""
-        return sum(self._outstanding)
+        the quantity admission actually gates on (per shard): pinned +
+        outstanding can never exceed ``num_pages``."""
+        return sum(sum(o) for o in self._outstanding)
 
     def occupancy(self) -> float:
         return self.in_use / self.num_pages
@@ -197,23 +261,27 @@ class PagePool:
         return [int(p) for p in self.table[slot, :self._held[slot]]]
 
     # ------------------------------------------------------- allocation ----
-    def _alloc(self, slot: int) -> int:
-        """Take one page for ``slot``'s reservation: free list first, then
-        evict a refcount-0 cached page (admission accounting guarantees one
-        exists whenever outstanding rights remain)."""
-        if self._outstanding[slot] <= 0:
+    def _alloc(self, slot: int, pos: int) -> int:
+        """Take one page for ``slot``'s page position ``pos``: the owning
+        shard's free list first, then evict one of that shard's refcount-0
+        cached pages (per-shard admission accounting guarantees one exists
+        whenever the shard's outstanding rights remain)."""
+        d = self.position_shard(pos)
+        if self._outstanding[slot][d] <= 0:
             raise ValueError(
-                f"slot {slot}: allocation exceeds its new-page budget")
-        self._outstanding[slot] -= 1
-        if self._free:
-            page = self._free.pop()
+                f"slot {slot}: allocation at position {pos} exceeds its "
+                f"new-page budget on shard {d}")
+        self._outstanding[slot][d] -= 1
+        if self._free_by[d]:
+            page = self._free_by[d].pop()
             self._scale_live[page] = True
             return page
+        mine = [p for p in self._evictable if self.page_shard(p) == d]
         if self.evict == "fifo":
-            page = min(self._evictable, key=self._seq.__getitem__)
-            self._evictable.pop(page)
+            page = min(mine, key=self._seq.__getitem__)
         else:                              # lru: least recently released
-            page, _ = self._evictable.popitem(last=False)
+            page = mine[0]                 # OrderedDict preserves order
+        self._evictable.pop(page)
         del self._index[self._page_key[page]]
         self._page_key[page] = None
         self.evictions += 1
@@ -266,12 +334,22 @@ class PagePool:
             hits = self._match_prefix(tokens)[:need]
             if hits and len(hits) * self.page_size >= len(tokens):
                 cow_budget = 1             # tail re-score COWs the last page
-        # Attaching a hit pins it but consumes no *new* page; supply must
-        # cover this slot's new pages plus every other reservation's
-        # outstanding rights (they may all cash in before we release).
-        new_allocs = need - len(hits) + cow_budget
-        if new_allocs > self.free_pages - self.outstanding_pages:
-            return None
+        # Attaching a hit pins it but consumes no *new* page; each shard's
+        # supply must cover this slot's new pages AT THAT SHARD'S POSITIONS
+        # plus every other reservation's outstanding rights there (they may
+        # all cash in before we release). Position-rigid: new page position
+        # j draws from the block map's shard (``position_shard(j)`` — see
+        # the class docstring); the tail COW replaces the last hit page in
+        # place, so it draws from that position's shard.
+        demand = [0] * self.seq_shards
+        for j in range(len(hits), need):
+            demand[self.position_shard(j)] += 1
+        if cow_budget:
+            demand[self.position_shard(len(hits) - 1)] += cow_budget
+        for d in range(self.seq_shards):
+            if demand[d] > self.free_pages_by_shard(d) - \
+                    self.outstanding_by_shard(d):
+                return None
         for i, page in enumerate(hits):
             if self.refcount[page] == 0:
                 del self._evictable[page]
@@ -279,7 +357,7 @@ class PagePool:
             self.table[slot, i] = page
         self._held[slot] = len(hits)
         self._reserved[slot] = need
-        self._outstanding[slot] = new_allocs
+        self._outstanding[slot] = demand
         if hits:
             self.version += 1
             self.prefix_hit_rows += len(hits) * self.page_size
@@ -300,7 +378,7 @@ class PagePool:
                 f"({self._reserved[slot]} pages)")
         new = []
         while self._held[slot] < need:
-            pid = self._alloc(slot)
+            pid = self._alloc(slot, self._held[slot])
             self.refcount[pid] = 1
             self.table[slot, self._held[slot]] = pid
             self._held[slot] += 1
@@ -325,7 +403,9 @@ class PagePool:
         for pi in range(start // ps, -(-stop // ps)):
             page = int(self.table[slot, pi])
             if self.refcount[page] > 1:
-                private = self._alloc(slot)
+                # position-rigid: the private replacement comes from the
+                # SAME position's shard, so the device copy is shard-local
+                private = self._alloc(slot, pi)
                 self.refcount[page] -= 1
                 self.refcount[private] = 1
                 self.table[slot, pi] = private
@@ -388,11 +468,15 @@ class PagePool:
             raise ValueError(f"fork: rows ({rows}) below src fill "
                              f"({src_rows})")
         shared = min(src_rows // self.page_size, held)
-        new_allocs = need - shared
-        if new_allocs > self.free_pages - self.outstanding_pages:
-            return None
+        demand = [0] * self.seq_shards
+        for j in range(shared, need):      # tail copy + future ensures
+            demand[self.position_shard(j)] += 1
+        for d in range(self.seq_shards):
+            if demand[d] > self.free_pages_by_shard(d) - \
+                    self.outstanding_by_shard(d):
+                return None
         self._reserved[dst] = need
-        self._outstanding[dst] = new_allocs
+        self._outstanding[dst] = demand
         for i in range(shared):
             page = int(self.table[src, i])
             self.refcount[page] += 1
@@ -400,7 +484,7 @@ class PagePool:
         self._held[dst] = shared
         copies: list[tuple[int, int]] = []
         for i in range(shared, held):      # the partial tail page, if any
-            private = self._alloc(dst)
+            private = self._alloc(dst, i)
             self.refcount[private] = 1
             self.table[dst, i] = private
             self._held[dst] = i + 1
@@ -426,12 +510,12 @@ class PagePool:
                 if self._page_key[page] is not None:
                     self._evictable[page] = self._page_key[page]
                 else:
-                    self._free.append(page)
+                    self._free_by[self.page_shard(page)].append(page)
                     self._scale_live[page] = False
         self.table[slot, :] = -1
         self._held[slot] = 0
         self._reserved[slot] = 0
-        self._outstanding[slot] = 0
+        self._outstanding[slot] = [0] * self.seq_shards
         if pages:
             self.version += 1
         return pages
@@ -505,12 +589,20 @@ class Scheduler:
         if self.page_pool is not None:
             pool = self.page_pool
             need = pool.pages_for(len(prompt) + max_new_tokens)
-            cap = min(pool.num_pages, pool.max_pages_per_slot)
-            if need > cap:
+            # per-shard capacity, not the global total: the block position
+            # map puts min(need, block) of this slot's pages on shard 0 —
+            # a request that fits num_pages globally but overflows one
+            # shard's slice would park at the FIFO head failing reserve
+            # forever (the PR 8 hang, resurfaced by sequence sharding)
+            worst_shard = min(need, pool.position_block)
+            if need > pool.max_pages_per_slot or \
+                    worst_shard > pool.pages_per_shard:
                 raise ValueError(
                     f"prompt ({len(prompt)}) + max_new_tokens "
-                    f"({max_new_tokens}) needs {need} pages, beyond pool "
-                    f"capacity ({pool.num_pages} pages, "
+                    f"({max_new_tokens}) needs {need} pages "
+                    f"({worst_shard} on one shard), beyond pool capacity "
+                    f"({pool.num_pages} pages over {pool.seq_shards} "
+                    f"shard(s) = {pool.pages_per_shard} per shard, "
                     f"{pool.max_pages_per_slot} per slot) — the request "
                     f"could never be admitted")
         uid = next(self._uids)

@@ -64,7 +64,11 @@ def _check_invariants(pool: PagePool, num_pages: int, max_slots: int):
     # free, evictable and pinned pages partition the pool — no page is on
     # the free/evictable lists while any slot references it, and the
     # refcounts of allocatable pages sum to 0
-    free, evictable = set(pool._free), set(pool._evictable)
+    free = {p for shard in pool._free_by for p in shard}
+    evictable = set(pool._evictable)
+    # per-shard free lists hold only pages the shard owns
+    for d, shard in enumerate(pool._free_by):
+        assert all(pool.page_shard(p) == d for p in shard)
     assert not free & evictable
     assert not (free | evictable) & set(flat)
     assert sum(pool.refcount[p] for p in free | evictable) == 0
@@ -84,9 +88,9 @@ def _check_invariants(pool: PagePool, num_pages: int, max_slots: int):
     # WITH their page, never separately — every page off the free list
     # (mapped or evictable) holds exactly one live scale block, free pages
     # hold none, and the aggregate matches the free-list complement
-    assert pool.live_scale_pages == num_pages - len(pool._free), (
+    assert pool.live_scale_pages == num_pages - len(free), (
         f"scale leak: {pool.live_scale_pages} live scale pages != "
-        f"{num_pages} - {len(pool._free)} free")
+        f"{num_pages} - {len(free)} free")
     for p in range(num_pages):
         assert pool._scale_live[p] == (p not in free), (
             f"page {p}: scale_live={pool._scale_live[p]} but "

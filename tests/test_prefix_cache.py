@@ -196,7 +196,8 @@ def test_eviction_reclaims_only_refcount_zero_cached_pages(evict):
     pool.ensure(0, ps)
     pool.commit_prefix(0, toks_b, ps)
     pool.release(0)
-    assert pool.cached_pages == 2 and len(pool._free) == 2
+    assert pool.cached_pages == 2
+    assert sum(len(shard) for shard in pool._free_by) == 2
     # a 4-page reservation must drain the free list then evict both
     assert pool.reserve(1, 4 * ps)
     pool.ensure(1, 4 * ps)
